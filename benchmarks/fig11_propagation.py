@@ -1,0 +1,25 @@
+"""Fig. 11: per-iteration propagated kv-pairs and runtime, with and without
+change propagation control (1% delta, as in the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
+from repro.core.incr_iter import IncrIterJob
+
+
+def run():
+    for label, ft, pdelta in (("noCPC", 0.0, 1.01), ("FT0.01", 0.01, 0.5),
+                              ("FT0.05", 0.05, 0.5)):
+        spec, struct, nbrs = pagerank_workload(s=8192, f=4)
+        job = IncrIterJob(spec, struct, value_bytes=8,
+                          pdelta_threshold=pdelta)
+        job.initial_converge(max_iters=100, tol=1e-6)
+        delta, _ = graph_update_delta(nbrs, 0.01)
+        st, hist = job.refresh(delta, max_iters=12, tol=1e-7,
+                               cpc_threshold=ft)
+        prop = [l.n_affected_dks for l in hist["logs"]]
+        times = [round(l.seconds * 1e3) for l in hist["logs"]]
+        emit(f"fig11.{label}.total_s",
+             sum(l.seconds for l in hist["logs"]) * 1e6,
+             f"prop={prop},ms_per_iter={times}")

@@ -1,0 +1,20 @@
+"""Fig. 12: input-size scaling of plainMR vs iterMR (the Spark-vs-iterMR
+experiment's shape: relative advantage grows with structure size)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, pagerank_workload, timed
+from repro.core.iterative import State, run_iterative, run_plain
+
+
+def run():
+    for label, s in (("xs", 2048), ("s", 8192), ("m", 32768)):
+        spec, struct, nbrs = pagerank_workload(s=s, f=4, p_edge=0.5)
+        st0, _ = run_iterative(spec, struct, max_iters=30, tol=1e-6)
+        _, t_plain = timed(lambda: run_plain(spec, struct, None,
+                                             max_iters=30, tol=1e-6))
+        _, t_iter = timed(lambda: run_iterative(
+            spec, struct, State(dict(st0.values), st0.valid),
+            max_iters=30, tol=1e-6))
+        emit(f"fig12.{label}.plainMR_s", t_plain * 1e6, f"vertices={s}")
+        emit(f"fig12.{label}.iterMR_s", t_iter * 1e6,
+             f"speedup={t_plain / max(t_iter, 1e-9):.2f}x")

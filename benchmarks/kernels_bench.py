@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: interpret-mode wall time (correctness-scale) +
+analytic TPU-v5e roofline estimates per kernel (the real perf claim)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # segment_reduce: one [R,K]x[R,D] matmul per tile
+    from repro.kernels.segment_reduce import segment_reduce_mxu
+    n, d, k = 4096, 64, 1024
+    seg = jnp.asarray(np.sort(rng.integers(0, k, n)), jnp.int32)
+    vals = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    out, dt = timed(lambda: segment_reduce_mxu(seg, vals, k, rows=512,
+                                               kblk=512).block_until_ready())
+    flops = 2 * n * 512 * d * (k // 512)
+    tpu_s = max(flops / PEAK_FLOPS, (n * d * 4 + k * d * 4) / HBM_BW)
+    emit("kernel.segment_reduce.interp_s", dt * 1e6,
+         f"tpu_est={tpu_s*1e6:.1f}us,flops={flops:.2e}")
+
+    # flash attention
+    from repro.kernels.flash_attention import flash_attention
+    b, h, s, hd = 1, 4, 512, 64
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    out, dt = timed(lambda: flash_attention(q, kk, v, q_blk=128,
+                                            kv_blk=128).block_until_ready())
+    flops = 4 * b * h * s * s * hd
+    tpu_s = max(flops / PEAK_FLOPS, 3 * b * h * s * hd * 4 / HBM_BW)
+    emit("kernel.flash_attention.interp_s", dt * 1e6,
+         f"tpu_est={tpu_s*1e6:.1f}us,flops={flops:.2e}")
+
+    # bitonic sort
+    from repro.kernels.sort_u32 import sort_kv32
+    n = 4096
+    keys = jnp.asarray(rng.integers(0, 2**30, n), jnp.uint32)
+    payload = jnp.arange(n, dtype=jnp.int32)
+    out, dt = timed(lambda: sort_kv32(keys, payload)[0].block_until_ready())
+    stages = int(np.log2(n)) * (int(np.log2(n)) + 1) // 2
+    tpu_s = stages * n * 8 / HBM_BW          # VPU-bound estimate
+    emit("kernel.sort_kv32.interp_s", dt * 1e6,
+         f"tpu_est={tpu_s*1e6:.1f}us,stages={stages}")
+
+    # spmv
+    from repro.kernels.spmv_ell import spmv_ell
+    s_, f_, v_ = 4096, 8, 4096
+    nbrs = rng.integers(0, v_, (s_, f_))
+    nbrs[rng.random((s_, f_)) < 0.3] = -1
+    contrib = rng.normal(0, 1, (s_, f_)).astype(np.float32)
+    out, dt = timed(lambda: spmv_ell(jnp.asarray(nbrs, jnp.int32),
+                                     jnp.asarray(contrib), v_,
+                                     rows=256, kblk=1024
+                                     ).block_until_ready())
+    flops = 2 * s_ * f_ * 1024 * (v_ // 1024)
+    tpu_s = max(flops / PEAK_FLOPS, (s_ * f_ * 8 + v_ * 4) / HBM_BW)
+    emit("kernel.spmv_ell.interp_s", dt * 1e6,
+         f"tpu_est={tpu_s*1e6:.1f}us")

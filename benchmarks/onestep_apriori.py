@@ -1,0 +1,47 @@
+"""§8.2 one-step APriori: recompute vs accumulator-incremental on a weekly
+delta (paper: 7.9% of the corpus, 12x speedup)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.apps import apriori
+from repro.core.accumulator import AccumulatorJob
+from repro.core.engine import run_onestep
+from repro.core.incremental import make_delta
+
+
+def run():
+    rng = np.random.default_rng(1)
+    V, L, N = 2000, 24, 400000
+    tweets = rng.integers(0, V, (N, L)).astype(np.int32)
+    tweets[rng.random((N, L)) < 0.2] = -1
+    pairs = apriori.candidate_pairs(tweets[:20000], V, top=64)
+    spec = apriori.make_spec(pairs)
+
+    job = AccumulatorJob(spec)
+    job.initial_run(apriori.make_input(np.arange(N), tweets))
+
+    dn = int(N * 0.079)
+    new = rng.integers(0, V, (dn, L)).astype(np.int32)
+    new[rng.random((dn, L)) < 0.2] = -1
+    ids = np.arange(N, N + dn, dtype=np.int32)
+    delta = make_delta(ids, ids, {"w": jnp.asarray(new)},
+                       np.ones(dn, np.int8))
+
+    # warm both paths
+    job.incremental_run(delta)
+    all_tweets = np.concatenate([tweets, new])
+    inp = apriori.make_input(np.arange(N + dn), all_tweets)
+    run_onestep(spec, inp)
+
+    _, t_recomp = timed(lambda: run_onestep(spec, inp)
+                        .results.values["c"].block_until_ready(), repeat=3)
+    job2 = AccumulatorJob(spec)
+    job2.initial_run(apriori.make_input(np.arange(N), tweets))
+    _, t_incr = timed(lambda: job2.incremental_run(delta))
+    emit("apriori.recompute_s", t_recomp * 1e6, f"tweets={N+dn}")
+    emit("apriori.incremental_s", t_incr * 1e6,
+         f"speedup={t_recomp / t_incr:.1f}x,map_work_saving={(N+dn)/dn:.1f}x"
+         " (paper: 12x on 7.9% delta)")

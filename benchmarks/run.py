@@ -1,0 +1,46 @@
+"""Benchmark harness entrypoint: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig8_overall, fig9_stages, fig10_cpc,
+                            fig11_propagation, fig12_scaling, fig13_fault,
+                            kernels_bench, onestep_apriori, table4_store)
+    modules = [
+        ("table4_store", table4_store),
+        ("fig9_stages", fig9_stages),
+        ("onestep_apriori", onestep_apriori),
+        ("fig11_propagation", fig11_propagation),
+        ("fig10_cpc", fig10_cpc),
+        ("fig12_scaling", fig12_scaling),
+        ("fig13_fault", fig13_fault),
+        ("kernels_bench", kernels_bench),
+        ("fig8_overall", fig8_overall),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("# FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

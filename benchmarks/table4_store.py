@@ -1,0 +1,35 @@
+"""Table 4: MRBG-Store retrieval policies on an iterative incremental
+PageRank — #reads, bytes read, elapsed merge time per policy.
+
+The paper's qualitative ordering to reproduce: index-only does the most
+(small) reads; single-fix-window reads the most bytes; multi-dynamic-window
+does fewest reads with modest bytes and the best time.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
+from repro.core.incr_iter import IncrIterJob
+from repro.core.mrbg_store import POLICIES
+
+
+def _one(policy, warm_only=False):
+    spec, struct, nbrs = pagerank_workload(s=8192, f=4)
+    job = IncrIterJob(spec, struct, value_bytes=8, policy=policy)
+    job.initial_converge(max_iters=100, tol=1e-6)
+    delta, _ = graph_update_delta(nbrs, 0.10)
+    t0 = time.perf_counter()
+    job.refresh(delta, max_iters=30, tol=1e-6, cpc_threshold=0.02)
+    dt = time.perf_counter() - t0
+    reads = sum(l.io_reads for l in job.logs)
+    rbytes = sum(l.io_bytes for l in job.logs)
+    return dt, reads, rbytes
+
+
+def run():
+    _one("multi-dynamic-window")          # warm all jit caches once
+    for policy in POLICIES:
+        dt, reads, rbytes = _one(policy)
+        emit(f"table4.{policy}.time_s", dt * 1e6,
+             f"reads={reads},rsize_bytes={rbytes}")

@@ -1,0 +1,54 @@
+"""The paper's technique inside the LM: MoE token dispatch IS the MapReduce
+shuffle.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/moe_shuffle.py
+
+Runs the same Llama-4-Scout-family MoE layer two ways on an 8-device mesh:
+  * ``gather``: GSPMD scatter/gather dispatch (baseline),
+  * ``a2a``: the shard_map shuffle — tokens hash-partitioned by K2 = expert
+    id, ONE all_to_all each way, segment-reduce combine (identical to
+    repro.core.distributed's engine),
+and verifies bit-level forward agreement + gradient agreement.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+import repro.configs as C
+from repro.models import blocks as B, meshctx
+from repro.models.common import tree_init
+from repro.models.config import smoke_config
+
+if len(jax.devices()) < 8:
+    raise SystemExit("run with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+cfg = smoke_config(C.get("llama4_scout_17b_a16e"))
+cfg = cfg.replace(
+    sharding=dataclasses.replace(cfg.sharding, batch=("data",)),
+    moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+meshctx.set_mesh(mesh)
+
+params = tree_init(B.plan_moe(cfg), jax.random.PRNGKey(0), jnp.float32)
+x = jnp.asarray(np.random.default_rng(0).normal(0, 0.5, (4, 16, cfg.d_model)),
+                jnp.float32)
+
+with mesh:
+    y_gather = B.apply_moe_gather(cfg, params, x)
+    y_a2a = jax.jit(lambda p, xx: B.apply_moe_a2a(cfg, p, xx, mesh))(params, x)
+    g_gather = jax.grad(lambda p: B.apply_moe_gather(cfg, p, x).sum())(params)
+    g_a2a = jax.jit(jax.grad(
+        lambda p: B.apply_moe_a2a(cfg, p, x, mesh).sum()))(params)
+
+print("forward max |Δ|:",
+      float(jnp.abs(y_gather - y_a2a).max()))
+for k in g_gather:
+    d = float(jnp.abs(g_gather[k] - g_a2a[k]).max())
+    print(f"grad {k:12s} max |Δ| = {d:.3e}")
+print("\nThe a2a path is the production EP dispatch: on the 256-chip pod "
+      "DeepSeek-V3's 256 experts live one-per-chip and dispatch is a single "
+      "256-way all_to_all — the paper's shuffle at pod scale.")

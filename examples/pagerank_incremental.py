@@ -1,0 +1,59 @@
+"""End-to-end incremental PageRank over an evolving graph (the paper's
+flagship workload).
+
+    PYTHONPATH=src python examples/pagerank_incremental.py
+
+A web graph evolves over 3 epochs; each refresh job starts from the prior
+converged state + preserved MRBGraph, re-computes only affected vertices
+(with change-propagation control), and checkpoints per epoch for fault
+tolerance.  Compares every refresh against from-scratch recomputation.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.apps import pagerank as pr
+from repro.core.ft import checkpoint_job, restore_job
+from repro.core.incr_iter import IncrIterJob
+from repro.core.incremental import make_delta
+from repro.data import DeltaStream
+
+S, F = 4096, 4
+nbrs = pr.random_graph(S, F, seed=1, p_edge=0.5)
+spec = pr.make_spec(S)
+
+job = IncrIterJob(spec, pr.make_struct(nbrs), value_bytes=8)
+st, hist = job.initial_converge(max_iters=150, tol=1e-7)
+print(f"job A_0 converged in {hist['iters']} iterations")
+
+stream = DeltaStream({"nbrs": nbrs}, frac=0.02, seed=7,
+                     mutator=lambda rng, rows, old: {
+                         "nbrs": np.where(rng.random(old["nbrs"].shape) < 0.5,
+                                          rng.integers(0, S,
+                                                       old["nbrs"].shape),
+                                          -1).astype(np.int32)})
+
+for epoch in range(1, 4):
+    rid, vals, sign = stream.delta()
+    delta = make_delta(rid, rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
+    st, h = job.refresh(delta, max_iters=80, tol=1e-7, cpc_threshold=0.01)
+    affected = [l.n_affected_dks for l in h["logs"]]
+    print(f"job A_{epoch}: mode={h['mode']} iters={h['iters']} "
+          f"affected/iter={affected[:8]}{'...' if len(affected) > 8 else ''}")
+
+    want = pr.oracle(stream.values["nbrs"], iters=300)
+    got = np.asarray(st.values["r"])
+    rel = (np.abs(got - want) / np.maximum(want, 1e-9)).mean()
+    print(f"         mean rel err vs recompute: {rel:.2e}")
+
+    ck = checkpoint_job(job, "/tmp/pr_ckpts", epoch)
+    print(f"         checkpointed -> {ck}")
+
+# fault recovery: lose the job object, restore, keep refreshing
+job = restore_job(spec, "/tmp/pr_ckpts")
+rid, vals, sign = stream.delta()
+delta = make_delta(rid, rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
+st, h = job.refresh(delta, max_iters=80, tol=1e-7, cpc_threshold=0.01)
+want = pr.oracle(stream.values["nbrs"], iters=300)
+rel = (np.abs(np.asarray(st.values["r"]) - want) /
+       np.maximum(want, 1e-9)).mean()
+print(f"post-recovery refresh: mode={h['mode']} mean rel err {rel:.2e} ✓")

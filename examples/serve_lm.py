@@ -1,0 +1,54 @@
+"""Batched serving example: prefill + decode with preserved per-request
+state — the LM-side instance of the paper's incremental principle (decode =
+|Δ|=1 refresh against the preserved KV/recurrent state).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.launch.steps import make_serve_step
+from repro.models import lm
+from repro.models.config import smoke_config
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="recurrentgemma-2b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=16)
+ap.add_argument("--gen", type=int, default=24)
+args = ap.parse_args()
+
+cfg = smoke_config(C.get(args.arch))
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+serve = jax.jit(make_serve_step(cfg))
+
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                   (args.batch, args.prompt_len)), jnp.int32)
+
+# prefill by stepping (a production server would batch-prefill; the cache
+# discipline is identical)
+caches = lm.init_caches(cfg, args.batch, args.prompt_len + args.gen + 1)
+logits = None
+for t in range(args.prompt_len):
+    logits, caches = serve(params, caches, prompts[:, t:t + 1])
+
+# greedy decode
+out = []
+tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+for _ in range(args.gen):
+    out.append(np.asarray(tok)[:, 0])
+    logits, caches = serve(params, caches, tok)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+gen = np.stack(out, axis=1)
+print(f"{cfg.name} (reduced): decoded {args.gen} tokens for "
+      f"{args.batch} requests")
+print(gen)
+print("state preserved per request:",
+      jax.tree.reduce(lambda a, b: a + b,
+                      jax.tree.map(lambda x: x.size, caches)), "elements")

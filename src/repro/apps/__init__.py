@@ -1,0 +1,1 @@
+# Apps are imported lazily (import repro.apps.<name>) to keep import costs low.

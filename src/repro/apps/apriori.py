@@ -1,0 +1,70 @@
+"""APriori frequent-pair counting (paper §8.1.3), one-step + accumulator.
+
+After a preprocessing pass picks the candidate list of frequent word pairs,
+the MapReduce job counts each pair's occurrences over the tweet corpus:
+Map checks every candidate pair against a tweet's word set and emits
+<pair_id, 1>; Reduce sums.  This is the paper's showcase for the
+accumulator-Reduce optimization (12× on the 7.9% weekly delta) — no
+MRBGraph is preserved at all.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import JobSpec, emit_multi
+from repro.core.kvstore import KV, make_kv, sum_reducer
+
+
+def make_input(tweet_ids: np.ndarray, tweets: np.ndarray, valid=None) -> KV:
+    """tweets: [N, L] word ids, -1 padding."""
+    if valid is None:
+        valid = np.ones(len(tweet_ids), bool)
+    return make_kv(np.asarray(tweet_ids, np.int32),
+                   {"w": jnp.asarray(tweets, jnp.int32)}, valid)
+
+
+def make_spec(pairs: np.ndarray) -> JobSpec:
+    """pairs: [P, 2] candidate word-id pairs."""
+    pa = jnp.asarray(pairs[:, 0], jnp.int32)
+    pb = jnp.asarray(pairs[:, 1], jnp.int32)
+    p = pairs.shape[0]
+
+    def map_fn(kv: KV, sign):
+        words = kv.values["w"]                              # [N, L]
+        has_a = (words[:, None, :] == pa[None, :, None]).any(-1)   # [N, P]
+        has_b = (words[:, None, :] == pb[None, :, None]).any(-1)
+        present = has_a & has_b & kv.valid[:, None]
+        k2 = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None, :],
+                              present.shape)
+        ones = jnp.ones(present.shape, jnp.float32)
+        return emit_multi(k2, {"c": ones}, kv.keys, present,
+                          record_sign=sign)
+
+    return JobSpec(map_fn, sum_reducer(), p, "apriori")
+
+
+def candidate_pairs(tweets: np.ndarray, vocab: int, top: int = 64,
+                    seed: int = 0) -> np.ndarray:
+    """Preprocessing job: pick candidate pairs from frequent words."""
+    counts = np.bincount(tweets[tweets >= 0].reshape(-1), minlength=vocab)
+    frequent = np.argsort(-counts)[:max(4, int(np.sqrt(2 * top)) + 2)]
+    pairs = []
+    for i in range(len(frequent)):
+        for j in range(i + 1, len(frequent)):
+            pairs.append((frequent[i], frequent[j]))
+            if len(pairs) >= top:
+                return np.asarray(pairs, np.int32)
+    return np.asarray(pairs, np.int32)
+
+
+def oracle(tweets: np.ndarray, pairs: np.ndarray, valid=None) -> np.ndarray:
+    out = np.zeros(pairs.shape[0])
+    for i, t in enumerate(tweets):
+        if valid is not None and not valid[i]:
+            continue
+        ws = set(int(w) for w in t if w >= 0)
+        for pi, (a, b) in enumerate(pairs):
+            if a in ws and b in ws:
+                out[pi] += 1
+    return out

@@ -1,0 +1,93 @@
+"""Kmeans on the iterative engine (paper Algorithm 3, all-to-one).
+
+Structure: SK = point id, SV = feature vector [dim].
+State:     DK = centroid id, DV = {"c": centroid [dim]} — but every Map
+instance needs *all* centroids, so ``replicate_state=True`` (the paper's
+all-to-one case / "smaller number of state kv-pairs": state is broadcast to
+every partition rather than co-partitioned).
+
+Map assigns each point to the nearest centroid and emits
+<cid, (pval, 1)>; Reduce averages via (sum, count) partial accumulators —
+the paper's own trick to make ``average`` accumulator-compatible (§3.5).
+
+Any input change moves centroids, which changes every assignment: P_Δ = 100%,
+so the engine's auto-off logic (Section 5.2) always runs Kmeans in iterMR
+mode — exactly the paper's Fig. 8 behavior where i²MapReduce "falls back to
+iterMR recomp" for Kmeans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import emit_single
+from repro.core.iterative import IterSpec
+from repro.core.kvstore import KV, make_kv, sum_reducer
+
+
+def make_struct(points: np.ndarray, valid_rows=None) -> KV:
+    s = points.shape[0]
+    if valid_rows is None:
+        valid_rows = np.ones(s, bool)
+    return make_kv(np.arange(s, dtype=np.int32),
+                   {"p": jnp.asarray(points, jnp.float32)}, valid_rows)
+
+
+def map_fn(struct: KV, dv, sign):
+    pts = struct.values["p"]                 # [N, dim]
+    cents = dv["c"]                          # [K, dim] (replicated state)
+    d2 = ((pts[:, None, :] - cents[None, :, :]) ** 2).sum(-1)   # [N, K]
+    cid = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    ones = jnp.ones(pts.shape[0], jnp.float32)
+    return emit_single(cid, {"sum": pts, "cnt": ones}, struct.keys,
+                       struct.valid, record_sign=sign)
+
+
+def _finalize(keys, acc, counts):
+    cnt = jnp.maximum(acc["cnt"], 1e-9)
+    return {"c": acc["sum"] / cnt[:, None], "cnt_out": acc["cnt"]}
+
+
+def make_spec(k: int, dim: int, init_centroids: np.ndarray) -> IterSpec:
+    init = jnp.asarray(init_centroids, jnp.float32)
+
+    def init_state(dks):
+        return {"c": init, "cnt_out": jnp.zeros(k, jnp.float32)}
+
+    def finalize(keys, acc, counts):
+        cnt = jnp.maximum(acc["cnt"], 1e-9)
+        return {"c": acc["sum"] / cnt[:, None], "cnt_out": acc["cnt"]}
+
+    return IterSpec(
+        map_fn=map_fn,
+        reducer=sum_reducer(finalize),
+        project=lambda sk: jnp.zeros_like(sk),
+        num_state=k,
+        init_state=init_state,
+        difference=lambda c, p: jnp.abs(c["c"] - p["c"]).max(axis=1),
+        replicate_state=True,
+        stable_topology=False,
+        name="kmeans",
+    )
+
+
+def oracle(points: np.ndarray, init_centroids: np.ndarray,
+           iters: int = 100, tol: float = 1e-6, valid_rows=None):
+    pts = points.astype(np.float64)
+    if valid_rows is not None:
+        pts = pts[valid_rows]
+    c = init_centroids.astype(np.float64).copy()
+    for _ in range(iters):
+        d2 = ((pts[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        a = d2.argmin(1)
+        newc = c.copy()
+        for j in range(c.shape[0]):
+            sel = pts[a == j]
+            if sel.shape[0]:
+                newc[j] = sel.mean(0)
+        if np.abs(newc - c).max() < tol:
+            c = newc
+            break
+        c = newc
+    return c

@@ -1,0 +1,44 @@
+"""WordCount — the canonical accumulator-Reduce example (paper §3.5).
+
+Records are documents: fixed-width arrays of word ids (−1 padding).
+Map emits <word, 1>; Reduce is integer sum — a distributive ⊕, so both the
+MRBGraph engine and the accumulator fast path apply (tests assert they
+agree with each other and with recomputation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import JobSpec, emit_multi
+from repro.core.kvstore import KV, make_kv, sum_reducer
+
+
+def make_input(doc_ids: np.ndarray, docs: np.ndarray, valid=None) -> KV:
+    if valid is None:
+        valid = np.ones(len(doc_ids), bool)
+    return make_kv(np.asarray(doc_ids, np.int32),
+                   {"w": jnp.asarray(docs, jnp.int32)}, valid)
+
+
+def map_fn(kv: KV, sign):
+    words = kv.values["w"]                    # [N, L]
+    n, l = words.shape
+    v2 = {"c": jnp.ones((n, l), jnp.float32)}
+    valid = (words >= 0) & kv.valid[:, None]
+    return emit_multi(words, v2, kv.keys, valid, record_sign=sign)
+
+
+def make_spec(vocab: int) -> JobSpec:
+    return JobSpec(map_fn, sum_reducer(), vocab, "wordcount")
+
+
+def oracle(docs: np.ndarray, vocab: int, valid=None) -> np.ndarray:
+    counts = np.zeros(vocab)
+    for i, d in enumerate(docs):
+        if valid is not None and not valid[i]:
+            continue
+        for w in d:
+            if w >= 0:
+                counts[w] += 1
+    return counts

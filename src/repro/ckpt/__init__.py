@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (  # noqa
+    latest_step, restore_pytree, save_pytree, CheckpointManager,
+)

@@ -1,0 +1,138 @@
+"""Checkpointing: atomic, manifest-driven, elastic-reshard on restore.
+
+Layout (one directory per step):
+
+  <root>/step_000010.tmp/   -> written, fsynced, then atomically renamed to
+  <root>/step_000010/
+      manifest.json         tree structure + shapes + dtypes + user metadata
+      arrays.npz            flattened leaves keyed by path
+
+Restore accepts an optional pytree of ShapeDtypeStructs *with shardings*;
+leaves are ``jax.device_put`` onto the new sharding, so a checkpoint taken
+on one mesh restores onto another (elastic re-scale) — the arrays are global
+views, independent of the mesh they were saved under.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree.flatten_with_path(tree)[0]
+    out = {}
+    dtypes = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        a = np.asarray(leaf)
+        dtypes[key] = str(a.dtype)
+        if a.dtype.name == "bfloat16":   # npz has no bf16: store raw bits
+            a = a.view(np.uint16)
+        out[key] = a
+    return out, dtypes
+
+
+def save_pytree(root: str, step: int, tree, metadata: Optional[Dict] = None,
+                keep: int = 3) -> Path:
+    root_p = Path(root)
+    root_p.mkdir(parents=True, exist_ok=True)
+    final = root_p / f"step_{step:08d}"
+    tmp = root_p / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat, dtypes = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": list(flat.keys()),
+        "dtypes": dtypes,
+        "metadata": metadata or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # fsync before the atomic publish
+    fd = os.open(tmp / "manifest.json", os.O_RDONLY)
+    os.fsync(fd)
+    os.close(fd)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(root_p, keep)
+    return final
+
+
+def _gc(root: Path, keep: int):
+    steps = sorted(p for p in root.glob("step_????????") if p.is_dir())
+    for p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(root: str) -> Optional[int]:
+    root_p = Path(root)
+    if not root_p.exists():
+        return None
+    steps = sorted(root_p.glob("step_????????"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def restore_pytree(root: str, step: int, like=None):
+    """Restore; ``like`` = pytree of ShapeDtypeStructs (elastic reshard)."""
+    d = Path(root) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+
+    def _load(k):
+        a = arrays[k]
+        if manifest.get("dtypes", {}).get(k) == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        return a
+
+    flat = [_load(k) for k in manifest["keys"]]
+    if like is not None:
+        like_flat, like_td = jax.tree.flatten(like)
+        assert len(like_flat) == len(flat), \
+            f"leaf count mismatch {len(like_flat)} != {len(flat)}"
+        out = []
+        for arr, tgt in zip(flat, like_flat):
+            a = np.asarray(arr)
+            if hasattr(tgt, "dtype") and a.dtype != tgt.dtype:
+                a = a.astype(tgt.dtype)
+            sh = getattr(tgt, "sharding", None)
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.device_put(a))
+        return jax.tree.unflatten(like_td, out), manifest["metadata"]
+    # fall back: reconstruct flat dict
+    return ({k: _load(k) for k in manifest["keys"]},
+            manifest["metadata"])
+
+
+class CheckpointManager:
+    """Keep-k rolling checkpoints with resume support."""
+
+    def __init__(self, root: str, keep: int = 3, every: int = 50):
+        self.root = root
+        self.keep = keep
+        self.every = every
+
+    def maybe_save(self, step: int, tree, metadata=None) -> bool:
+        if step % self.every != 0:
+            return False
+        save_pytree(self.root, step, tree, metadata, self.keep)
+        return True
+
+    def resume(self, like=None):
+        s = latest_step(self.root)
+        if s is None:
+            return None, None, None
+        tree, meta = restore_pytree(self.root, s, like)
+        return s, tree, meta

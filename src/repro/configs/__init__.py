@@ -1,0 +1,54 @@
+"""Assigned-architecture registry: ``get(name)`` -> ModelConfig.
+
+Each architecture also declares which shape cells apply (encoder-only archs
+have no decode; quadratic-attention archs skip long_500k — see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.models.config import ModelConfig, SHAPES, ShapeCell
+
+ARCHS = [
+    "deepseek_v3_671b",
+    "llama4_scout_17b_a16e",
+    "hubert_xlarge",
+    "chameleon_34b",
+    "recurrentgemma_2b",
+    "stablelm_12b",
+    "gemma2_9b",
+    "mistral_nemo_12b",
+    "qwen3_1_7b",
+    "xlstm_125m",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES["qwen3-1.7b"] = "qwen3_1_7b"
+ALIASES["llama4-scout-17b-a16e"] = "llama4_scout_17b_a16e"
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{ALIASES.get(name, name)}")
+    return mod.CONFIG
+
+
+def shape_cells(cfg: ModelConfig) -> List[ShapeCell]:
+    """The applicable (arch x shape) cells for this architecture."""
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"]]
+    if cfg.family != "encoder":
+        cells.append(SHAPES["decode_32k"])
+        if cfg.family in ("hybrid", "ssm", "xlstm"):
+            cells.append(SHAPES["long_500k"])
+    return cells
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    out = []
+    for a in ARCHS:
+        cfg = get(a)
+        for cell in shape_cells(cfg):
+            out.append((a, cell.name))
+    return out

@@ -1,0 +1,150 @@
+"""Accumulator-Reduce optimization (paper Section 3.5) + invertible fast path.
+
+When the Reduce function is a distributive accumulation `⊕` and the delta is
+insert-only, the MRBGraph need not be preserved at all: the engine keeps only
+the Reduce *output* and folds `f(ΔD)` into it:
+
+    f(D ∪ ΔD) = f(D) ⊕ f(ΔD)
+
+Beyond the paper: for reducers that form an abelian *group* (sum), deletions
+and updates are handled without the MRBGraph either, by accumulating the
+*negated* contribution of '-' records.  ``mean`` is handled as the paper
+suggests -- partial (sum, count) accumulators finalized on read.
+
+Work per refresh is proportional to |Δ| (plus an O(|affected|) gather/patch
+of the dense output view), never to |D|.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import JobSpec
+from repro.core.incremental import DeltaKV, ResultView, _pad_edges
+from repro.core.kvstore import (
+    INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce,
+    next_bucket, segment_reduce, sort_edges,
+)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _delta_map_acc(spec_static, delta: DeltaKV) -> Edges:
+    # NOTE: no shuffle-sort here — the accumulator path needs neither chunk
+    # grouping nor merge order (that is exactly its §3.5 saving); host-side
+    # nonzero extraction replaces it.
+    map_fn, = spec_static
+    kv = KV(delta.keys, delta.values, delta.valid)
+    return map_fn(kv, delta.sign)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _accumulate(reducer: Reducer, key_cap: int, edges: Edges,
+                affected_keys: jax.Array, old_acc: Any, old_counts: jax.Array):
+    """Fold the delta edges' contribution into the old accumulators."""
+    if reducer.kind in ("sum", "mean"):
+        # signed contribution: deletions subtract (group inverse)
+        signf = edges.sign.astype(jnp.float32)
+        v2 = jax.tree.map(
+            lambda a: (a * signf.reshape((-1,) + (1,) * (a.ndim - 1))
+                       .astype(a.dtype)), edges.v2)
+    else:
+        v2 = edges.v2   # insert-only (checked by caller)
+
+    local = jnp.searchsorted(affected_keys, edges.k2).astype(jnp.int32)
+    in_set = jnp.take(affected_keys, jnp.clip(local, 0, key_cap - 1)) == edges.k2
+    ok = edges.valid & in_set
+    acc_d, _ = segment_reduce(reducer, local, v2, ok, key_cap)
+    cnt_d = jax.ops.segment_sum(
+        jnp.where(ok, edges.sign.astype(jnp.int32), 0),
+        jnp.where(ok, local, key_cap), num_segments=key_cap + 1)[:key_cap]
+
+    if reducer.kind in ("sum", "mean"):
+        acc = jax.tree.map(lambda o, d: o + d.astype(o.dtype), old_acc, acc_d)
+    elif reducer.kind == "min":
+        acc = jax.tree.map(
+            lambda o, d: jnp.where(old_counts.reshape(
+                (-1,) + (1,) * (o.ndim - 1)) > 0, jnp.minimum(o, d), d),
+            old_acc, acc_d)
+    else:  # max
+        acc = jax.tree.map(
+            lambda o, d: jnp.where(old_counts.reshape(
+                (-1,) + (1,) * (o.ndim - 1)) > 0, jnp.maximum(o, d), d),
+            old_acc, acc_d)
+    counts = old_counts + cnt_d
+    values = finalize_reduce(reducer, affected_keys, acc, counts)
+    return acc, counts, values
+
+
+class AccumulatorJob:
+    """Incremental job that preserves only <K3,V3> (no MRBGraph).
+
+    Keeps *raw* accumulators host-side (partial sums for mean) so that
+    subsequent deltas can be folded in; ``view`` always holds finalized
+    values.
+    """
+
+    def __init__(self, spec: JobSpec):
+        if not (spec.reducer.invertible or spec.reducer.kind in
+                ("min", "max", "sum", "mean")):
+            raise ValueError("reducer is not accumulative")
+        self.spec = spec
+        self.raw_acc: Dict[str, np.ndarray] = {}
+        self.view: ResultView = None  # type: ignore
+
+    def initial_run(self, inp: KV) -> ResultView:
+        from repro.core.engine import run_onestep
+        # run once, but capture raw accumulators (pre-finalize)
+        spec = self.spec
+
+        edges = _delta_map_acc(
+            (spec.map_fn,),
+            DeltaKV(inp.keys, inp.keys, inp.values, inp.valid,
+                    jnp.ones(inp.capacity, jnp.int8)))
+        acc, counts = segment_reduce(spec.reducer, edges.k2, edges.v2,
+                                     edges.valid, spec.num_keys)
+        keys = jnp.arange(spec.num_keys, dtype=jnp.int32)
+        values = finalize_reduce(spec.reducer, keys, acc, counts)
+        self.raw_acc = {n: np.array(a) for n, a in acc.items()}
+        counts_h = np.array(counts)
+        self.view = ResultView(
+            spec.num_keys, {n: np.array(a) for n, a in values.items()},
+            counts_h > 0, counts_h)
+        return self.view
+
+    def incremental_run(self, delta: DeltaKV) -> ResultView:
+        red = self.spec.reducer
+        if red.kind in ("min", "max"):
+            if bool(np.any(np.asarray(delta.sign)[np.asarray(delta.valid)] < 0)):
+                raise ValueError(
+                    f"accumulator path for '{red.kind}' requires insert-only "
+                    "deltas (paper §3.5); use the MRBGraph engine instead")
+        edges = _delta_map_acc((self.spec.map_fn,), delta)
+        eh = edges_to_host(edges)
+        affected = np.unique(eh["k2"])
+        if affected.size == 0:
+            return self.view
+        key_cap = next_bucket(affected.size, 64)
+        keys_pad = np.full(key_cap, np.int32(2**31 - 1), np.int32)
+        keys_pad[:affected.size] = affected.astype(np.int32)
+        idx = np.minimum(keys_pad, self.spec.num_keys - 1)
+
+        edge_cap = next_bucket(max(int(eh["k2"].shape[0]), 1), 64)
+        v2 = eh["v2"] if isinstance(eh["v2"], dict) else {"v": eh["v2"]}
+        dev_edges = _pad_edges(eh["k2"], eh["mk"], v2, eh["sign"], edge_cap)
+
+        old_acc = {n: jnp.asarray(a[idx]) for n, a in self.raw_acc.items()}
+        old_counts = jnp.asarray(self.view.counts[idx].astype(np.int32))
+        acc, counts, values = _accumulate(red, key_cap, dev_edges,
+                                          jnp.asarray(keys_pad), old_acc,
+                                          old_counts)
+        sel = slice(0, affected.size)
+        for n, a in acc.items():
+            self.raw_acc[n][affected] = np.asarray(a)[sel]
+        self.view.patch(affected,
+                        {n: np.asarray(a)[sel] for n, a in values.items()},
+                        np.asarray(counts)[sel])
+        return self.view

@@ -1,0 +1,161 @@
+"""Fault tolerance for the incremental iterative engine (paper Section 6).
+
+i²MapReduce checkpoints the prime-Reduce output state *and* the MRBGraph
+file every iteration; on failure the interdependent prime Map/Reduce pair is
+rescheduled together and resumes from the checkpoint.  Here:
+
+  * ``checkpoint_job`` snapshots (state values, CPC accumulators, MRBG-Store
+    batches + chunk index, structure mirror) atomically per iteration;
+  * ``restore_job`` rebuilds an ``IncrIterJob`` byte-identically — tests
+    prove a killed-and-restored job produces the same refresh results;
+  * ``FailureInjector`` deterministically raises at a chosen iteration to
+    exercise the recovery path (the Fig. 13 experiment);
+  * ``SkewMonitor`` implements the straggler/load-balance hook (§6.2, the
+    paper leaves it as future work): it watches per-partition edge counts
+    and emits a re-partition plan (splitting the heaviest partitions) that
+    ``partition_struct`` can apply — beyond-paper but in the paper's spirit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.incr_iter import IncrIterJob
+from repro.core.iterative import IterSpec, State
+from repro.core.mrbg_store import MRBGStore
+
+import jax.numpy as jnp
+
+
+def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
+    rootp = Path(root)
+    rootp.mkdir(parents=True, exist_ok=True)
+    tmp = rootp / f"it_{iteration:06d}.tmp"
+    final = rootp / f"it_{iteration:06d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    np.savez(tmp / "state.npz",
+             **{f"sv_{k}": np.asarray(v) for k, v in job.state.values.items()},
+             cpc=job.cpc_accum,
+             **{f"ev_{k}": np.asarray(v)
+                for k, v in job.emitted_values.items()},
+             struct_valid=job.struct_valid, struct_keys=job.struct_keys,
+             **{f"st_{k}": v for k, v in job.struct_values.items()})
+    # MRBG-Store: batches + index (the paper's per-iteration MRBG checkpoint)
+    store = job.store
+    blobs = {}
+    for i, b in enumerate(store.batches):
+        blobs[f"b{i}_k2"] = b.k2
+        blobs[f"b{i}_mk"] = b.mk
+        blobs[f"b{i}_sign"] = b.sign
+        for n, a in b.v2.items():
+            blobs[f"b{i}_v2_{n}"] = a
+    np.savez(tmp / "mrbg.npz", idx_batch=store.idx_batch,
+             idx_start=store.idx_start, idx_len=store.idx_len, **blobs)
+    meta = {
+        "iteration": iteration,
+        "n_batches": store.n_batches,
+        "offsets": [b.offset for b in store.batches],
+        "v2_names": sorted({n for b in store.batches for n in b.v2}),
+        "mrbg_on": job.mrbg_on,
+        "file_records": store.file_records,
+        "live_records": store.live_records,
+        "value_bytes": store.record_bytes - 8,
+        "policy": store.policy,
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_job(spec: IterSpec, root: str,
+                iteration: Optional[int] = None) -> IncrIterJob:
+    rootp = Path(root)
+    its = sorted(rootp.glob("it_??????"))
+    assert its, "no checkpoints"
+    d = its[-1] if iteration is None else rootp / f"it_{iteration:06d}"
+    meta = json.loads((d / "meta.json").read_text())
+    st = np.load(d / "state.npz")
+    from repro.core.kvstore import KV, make_kv
+
+    struct_vals = {k[3:]: st[k] for k in st.files if k.startswith("st_")}
+    struct = make_kv(st["struct_keys"],
+                     {k: jnp.asarray(v) for k, v in struct_vals.items()},
+                     st["struct_valid"])
+    job = IncrIterJob(spec, struct, value_bytes=meta["value_bytes"],
+                      policy=meta["policy"])
+    sv = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("sv_")}
+    ev = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("ev_")}
+    job.state = State(sv, jnp.ones(spec.num_state, jnp.bool_))
+    job.emitted_values = ev
+    job.cpc_accum = st["cpc"].copy()
+    job.mrbg_on = meta["mrbg_on"]
+
+    mz = np.load(d / "mrbg.npz")
+    store = job.store
+    from repro.core.mrbg_store import _Batch
+    names = meta["v2_names"]
+    for i, off in enumerate(meta["offsets"]):
+        v2 = {n: mz[f"b{i}_v2_{n}"] for n in names
+              if f"b{i}_v2_{n}" in mz.files}
+        store.batches.append(_Batch(mz[f"b{i}_k2"], mz[f"b{i}_mk"], v2,
+                                    mz[f"b{i}_sign"], off))
+    store.idx_batch = mz["idx_batch"].copy()
+    store.idx_start = mz["idx_start"].copy()
+    store.idx_len = mz["idx_len"].copy()
+    store.file_records = meta["file_records"]
+    store.live_records = meta["live_records"]
+    return job
+
+
+class FailureInjector:
+    """Deterministically fail at iteration k (Fig. 13 experiment)."""
+
+    def __init__(self, fail_at: int):
+        self.fail_at = fail_at
+        self.fired = False
+
+    def __call__(self, iteration: int):
+        if iteration == self.fail_at and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected worker failure @ it {iteration}")
+
+
+class SkewMonitor:
+    """Straggler detection + re-partition planning (beyond-paper §6.2).
+
+    Tracks per-partition work (edge counts / elapsed time); when the max
+    exceeds ``ratio`` x median, proposes moving records from the heaviest
+    partitions to the lightest (preserving order, as SkewTune does, so the
+    output can be reconstructed by concatenation).
+    """
+
+    def __init__(self, ratio: float = 1.5):
+        self.ratio = ratio
+        self.history = []
+
+    def observe(self, per_partition_work: np.ndarray):
+        self.history.append(np.asarray(per_partition_work))
+
+    def plan(self) -> Optional[Dict[int, int]]:
+        if not self.history:
+            return None
+        w = self.history[-1].astype(np.float64)
+        med = max(np.median(w), 1e-9)
+        if w.max() <= self.ratio * med:
+            return None
+        heavy = int(np.argmax(w))
+        light = int(np.argmin(w))
+        move = int((w[heavy] - med) / max(w[heavy], 1) *
+                   100)  # % of heavy partition's records to migrate
+        return {"from": heavy, "to": light, "percent": max(1, min(50, move))}

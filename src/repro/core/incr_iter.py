@@ -1,0 +1,354 @@
+"""Incremental iterative processing (paper Section 5).
+
+A refresh job A_i starts from job A_{i-1}'s *converged* state D_{i-1} and the
+preserved MRBGraph of A_{i-1}'s final iteration (Section 5.1):
+
+  * iteration 1's delta input is the **delta structure data**: changed
+    records are re-Mapped ('-' rows reproduce the old edges as tombstones —
+    Map is pure and the state is still the converged one, so the replay is
+    exact), merged against the preserved MRBGraph, and only affected Reduce
+    instances re-run;
+  * iteration j>=2's delta input is the **delta state data**: the reverse
+    dependency index (DK -> structure records, from Project) selects the Map
+    instances affected by emitted state changes.
+
+**Change propagation control** (Section 5.3): per-DK changes accumulate; a DK
+is emitted to the next iteration only when its accumulated change exceeds the
+filter threshold (so starved keys eventually fire), trading bounded error for
+sharply less propagation.
+
+**Auto MRBG-off** (Section 5.2): when the emitted fraction P_Δ exceeds
+``pdelta_threshold`` (default 0.5), maintaining fine-grain state costs more
+than it saves; the job falls back to plain iterative recomputation from the
+current state (iterMR mode) and rebuilds the MRBGraph in one preserving pass
+after convergence so the *next* refresh job can be incremental again.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.incremental import DeltaKV, _merge_reduce, _pad_edges
+from repro.core.iterative import (
+    IterSpec, State, _iter_step, default_difference, run_iterative,
+)
+from repro.core.kvstore import (
+    INVALID_KEY, KV, Edges, edges_to_host, next_bucket, sort_edges,
+)
+from repro.core.mrbg_store import MRBGStore
+
+_IK = np.int32(2**31 - 1)
+
+
+@dataclass
+class IterationLog:
+    iteration: int
+    n_input_changes: int        # delta records (it 1) or changed DKs (it>=2)
+    n_affected_dks: int         # reduce instances re-run ("propagated kv-pairs")
+    n_emitted: int              # survived CPC filter
+    mrbg_on: bool
+    seconds: float
+    io_reads: int = 0
+    io_bytes: int = 0
+
+
+class IncrIterJob:
+    """Owns structure data, converged state, MRBGraph store, CPC accumulators."""
+
+    def __init__(self, spec: IterSpec, struct: KV, *, value_bytes: int = 8,
+                 policy: str = "multi-dynamic-window",
+                 cpc_threshold: float = 0.0,
+                 pdelta_threshold: float = 0.5):
+        self.spec = spec
+        self.cpc_threshold = cpc_threshold
+        self.pdelta_threshold = pdelta_threshold
+        self.store = MRBGStore(spec.num_state, value_bytes, policy=policy)
+        self.mrbg_on = True
+
+        # host mirror of the structure data (the partitioned structure file)
+        self.struct_values = {n: np.array(a) for n, a in struct.values.items()}
+        self.struct_valid = np.array(struct.valid)
+        self.struct_keys = np.array(struct.keys)
+        self.capacity = struct.capacity
+        self._rebuild_reverse_index()
+
+        self.state: Optional[State] = None
+        # state values as of each DK's last emission (what the preserved
+        # edges were computed from) -- needed to replay '-' for
+        # topology-changing Maps
+        self.emitted_values: Optional[Dict[str, jax.Array]] = None
+        self.cpc_accum = np.zeros(spec.num_state, np.float32)
+        self.logs: List[IterationLog] = []
+        self._last_max_change = np.inf
+
+    # ------------------------------------------------------------------
+    def _rebuild_reverse_index(self) -> None:
+        """CSR: DK -> structure record ids (Project's reverse image)."""
+        dks = np.asarray(
+            jax.jit(self.spec.project)(jnp.asarray(self.struct_keys)))
+        dks = np.where(self.struct_valid, dks, self.spec.num_state)
+        order = np.argsort(dks, kind="stable")
+        sorted_dks = dks[order]
+        counts = np.bincount(sorted_dks, minlength=self.spec.num_state + 1)
+        self.rev_indptr = np.concatenate(
+            [[0], np.cumsum(counts[:self.spec.num_state])]).astype(np.int64)
+        self.rev_ids = order[:self.rev_indptr[-1]].astype(np.int32)
+        self.dks_host = dks.astype(np.int32)
+
+    def _records_of_dks(self, dks: np.ndarray) -> np.ndarray:
+        if self.spec.replicate_state:
+            return np.nonzero(self.struct_valid)[0].astype(np.int32)
+        parts = [self.rev_ids[self.rev_indptr[d]:self.rev_indptr[d + 1]]
+                 for d in dks]
+        if not parts:
+            return np.zeros(0, np.int32)
+        return np.unique(np.concatenate(parts)).astype(np.int32)
+
+    def _struct_kv(self) -> KV:
+        return KV(jnp.asarray(self.struct_keys),
+                  {n: jnp.asarray(a) for n, a in self.struct_values.items()},
+                  jnp.asarray(self.struct_valid))
+
+    # ------------------------------------------------------------------
+    def initial_converge(self, *, max_iters: int = 100, tol: float = 1e-4):
+        """Job A_0: full iterative run; preserve final-iteration MRBGraph."""
+        state, hist = run_iterative(self.spec, self._struct_kv(), None,
+                                    max_iters=max_iters, tol=tol,
+                                    preserve_last=True)
+        self.state = state
+        self.emitted_values = dict(state.values)
+        self._preserve(hist["last_edges"])
+        return state, hist
+
+    def _preserve(self, edges: Edges) -> None:
+        host = edges_to_host(edges)
+        v2 = host["v2"] if isinstance(host["v2"], dict) else {"v": host["v2"]}
+        self.store.append(host["k2"], host["mk"], v2)
+
+    # ------------------------------------------------------------------
+    def refresh(self, delta_struct: DeltaKV, *, max_iters: int = 100,
+                tol: float = 1e-6,
+                cpc_threshold: Optional[float] = None):
+        """Job A_i: incremental refresh after a structure delta."""
+        assert self.state is not None, "initial_converge first"
+        thresh = self.cpc_threshold if cpc_threshold is None else cpc_threshold
+        spec = self.spec
+        self.logs = []
+        self._last_max_change = np.inf
+
+        # -- apply the delta to the structure mirror ----------------------
+        rid = np.asarray(delta_struct.record_ids)
+        sgn = np.asarray(delta_struct.sign)
+        dvalid = np.asarray(delta_struct.valid)
+        for i in np.nonzero(dvalid)[0]:
+            r = int(rid[i])
+            if sgn[i] < 0:
+                self.struct_valid[r] = False
+            else:
+                self.struct_valid[r] = True
+                self.struct_keys[r] = int(np.asarray(delta_struct.keys)[i])
+                for n, a in self.struct_values.items():
+                    a[r] = np.asarray(delta_struct.values[n])[i]
+        self._rebuild_reverse_index()
+
+        if spec.replicate_state or not self.mrbg_on:
+            # Kmeans-style: fine-grain state is pointless (P_Δ = 100%);
+            # iterate from the previously converged state (iterMR mode).
+            return self._fallback_iterate(max_iters, tol)
+
+        # -- iteration 1: delta input = delta structure data --------------
+        t0 = time.perf_counter()
+        self.store.reset_stats()
+        sel_dks = jax.jit(spec.project)(delta_struct.keys)
+        changed = self._incr_iteration(
+            kv=KV(delta_struct.keys, delta_struct.values, delta_struct.valid),
+            record_ids=rid, sign=delta_struct.sign, sel_dks=sel_dks,
+            thresh=thresh, iteration=1,
+            n_input=int(dvalid.sum()), t0=t0)
+        if changed is None:          # P_Δ blew past the threshold
+            return self._fallback_iterate(max_iters, tol)
+
+        # -- iterations >= 2: delta input = delta state data ---------------
+        for it in range(2, max_iters + 1):
+            if changed.size == 0 or self._last_max_change < tol:
+                break
+            t0 = time.perf_counter()
+            self.store.reset_stats()
+            recs = self._records_of_dks(changed)
+            if recs.size == 0:
+                break
+            cap = next_bucket(recs.size, 64)
+            sel = np.full(cap, 0, np.int32)
+            sel[:recs.size] = recs
+            ok = np.zeros(cap, bool)
+            ok[:recs.size] = True
+            kv = KV(jnp.asarray(self.struct_keys[sel]),
+                    {n: jnp.asarray(a[sel])
+                     for n, a in self.struct_values.items()},
+                    jnp.asarray(ok & self.struct_valid[sel]))
+            changed = self._incr_iteration(
+                kv=kv, record_ids=sel, sign=jnp.ones(cap, jnp.int8),
+                sel_dks=jnp.asarray(self.dks_host[sel]), thresh=thresh,
+                iteration=it, n_input=int(changed.size), t0=t0)
+            if changed is None:
+                return self._fallback_iterate(max_iters - it, tol)
+
+        return self.state, {"iters": len(self.logs), "logs": self.logs,
+                            "mode": "i2"}
+
+    # ------------------------------------------------------------------
+    def _incr_iteration(self, kv: KV, record_ids, sign, sel_dks, thresh,
+                        iteration: int, n_input: int, t0: float):
+        """One incremental iteration; returns emitted DKs (or None => P_Δ
+        exceeded, caller should fall back)."""
+        spec = self.spec
+        state_vals = self.state.values
+
+        if spec.stable_topology:
+            edges = _delta_map_iter(
+                (spec.map_fn, spec.replicate_state), kv,
+                jnp.asarray(record_ids), jnp.asarray(sign, jnp.int8),
+                jnp.asarray(sel_dks), state_vals)
+        else:
+            # topology may change: tombstone-replay with the last-emitted
+            # state, then insert with the current state
+            old_edges = _delta_map_iter(
+                (spec.map_fn, spec.replicate_state), kv,
+                jnp.asarray(record_ids),
+                -jnp.abs(jnp.asarray(sign, jnp.int8)),
+                jnp.asarray(sel_dks), self.emitted_values)
+            new_edges = _delta_map_iter(
+                (spec.map_fn, spec.replicate_state), kv,
+                jnp.asarray(record_ids), jnp.asarray(sign, jnp.int8),
+                jnp.asarray(sel_dks), state_vals)
+            edges = _concat_edges(old_edges, new_edges)
+
+        dh = edges_to_host(edges, sorted_valid_first=True)
+        affected = np.unique(dh["k2"])
+        if affected.size == 0:
+            self.logs.append(IterationLog(iteration, n_input, 0, 0, True,
+                                          time.perf_counter() - t0))
+            return np.zeros(0, np.int64)
+
+        pk2, pmk, pv2, _ = self.store.query(affected)
+        v2_t = dh["v2"] if isinstance(dh["v2"], dict) else {"v": dh["v2"]}
+        if pv2 is None or pk2.shape[0] == 0:
+            pv2 = {n: np.zeros((0,) + a.shape[1:], a.dtype)
+                   for n, a in v2_t.items()}
+            pk2 = np.zeros(0, np.int32)
+            pmk = np.zeros(0, np.int32)
+
+        key_cap = next_bucket(affected.size, 64)
+        pres = _pad_edges(pk2, pmk, pv2, np.ones(pk2.shape[0], np.int8),
+                          next_bucket(max(int(pk2.shape[0]), 1), 64))
+        delt = _pad_edges(dh["k2"], dh["mk"], v2_t,
+                          np.asarray(dh["sign"], np.int8),
+                          next_bucket(max(int(dh["k2"].shape[0]), 1), 64))
+        keys_pad = np.full(key_cap, _IK, np.int32)
+        keys_pad[:affected.size] = affected.astype(np.int32)
+
+        merged, values, counts = _merge_reduce(spec.reducer, key_cap, pres,
+                                               delt, jnp.asarray(keys_pad))
+
+        # preserve merged chunks
+        mh = edges_to_host(merged)
+        mv2 = mh["v2"] if isinstance(mh["v2"], dict) else {"v": mh["v2"]}
+        self.store.append(mh["k2"], mh["mk"], mv2)
+        counts_h = np.asarray(counts)[:affected.size]
+        self.store.mark_deleted(affected[counts_h == 0])
+
+        # CPC: accumulate per-DK change; emit above-threshold keys
+        diff_fn = spec.difference or default_difference
+        aff_idx = jnp.asarray(affected.astype(np.int32))
+        old_vals = {n: jnp.take(a, aff_idx, axis=0)
+                    for n, a in state_vals.items()}
+        new_vals = {n: jnp.asarray(np.asarray(v)[:affected.size])
+                    for n, v in values.items()}
+        change = np.asarray(diff_fn(new_vals, old_vals))
+        self._last_max_change = float(change.max()) if change.size else 0.0
+        self.cpc_accum[affected] += change
+        emit_mask = self.cpc_accum[affected] > thresh
+        emitted = affected[emit_mask]
+        self.cpc_accum[emitted] = 0.0
+
+        # always record the refreshed values (deferred emission only)
+        sv = dict(state_vals)
+        for n in sv:
+            arr = np.array(sv[n])
+            arr[affected] = np.asarray(new_vals[n])
+            sv[n] = jnp.asarray(arr)
+        self.state = State(sv, self.state.valid)
+        ev = dict(self.emitted_values)
+        for n in ev:
+            arr = np.array(ev[n])
+            arr[emitted] = np.asarray(new_vals[n])[emit_mask]
+            ev[n] = jnp.asarray(arr)
+        self.emitted_values = ev
+
+        st = self.store.stats
+        self.logs.append(IterationLog(
+            iteration, n_input, int(affected.size), int(emitted.size), True,
+            time.perf_counter() - t0, st.n_reads, st.bytes_read))
+
+        # P_Δ detection (Section 5.2): the *delta state data* |ΔD_i| is what
+        # drives the next iteration's recomputation.
+        p_delta = emitted.size / max(self.spec.num_state, 1)
+        if p_delta > self.pdelta_threshold:
+            self.mrbg_on = False
+            return None
+        return emitted
+
+    # ------------------------------------------------------------------
+    def _fallback_iterate(self, max_iters: int, tol: float):
+        """iterMR mode from the current state; rebuild MRBGraph at the end."""
+        t0 = time.perf_counter()
+        state, hist = run_iterative(self.spec, self._struct_kv(), self.state,
+                                    max_iters=max_iters, tol=tol,
+                                    preserve_last=True)
+        self.state = state
+        self.emitted_values = dict(state.values)
+        self.store = MRBGStore(self.spec.num_state,
+                               self.store.record_bytes - 8,
+                               policy=self.store.policy)
+        if hist["last_edges"] is not None:
+            self._preserve(hist["last_edges"])
+        self.mrbg_on = True
+        self.cpc_accum[:] = 0.0
+        self.logs.append(IterationLog(-1, 0, self.spec.num_state,
+                                      self.spec.num_state, False,
+                                      time.perf_counter() - t0))
+        return self.state, {"iters": hist["iters"], "logs": self.logs,
+                            "mode": "iterMR-fallback"}
+
+
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _delta_map_iter(spec_static, kv: KV, record_ids, sign, sel_dks,
+                    state_values):
+    """Prime Map over a selected subset of structure records."""
+    map_fn, replicate = spec_static
+    if replicate:
+        dv = state_values
+    else:
+        dv = jax.tree.map(lambda a: jnp.take(a, sel_dks, axis=0),
+                          state_values)
+    edges = map_fn(KV(kv.keys, kv.values, kv.valid), dv, sign)
+    return sort_edges(edges)
+
+
+@jax.jit
+def _concat_edges(a: Edges, b: Edges) -> Edges:
+    return sort_edges(Edges(
+        jnp.concatenate([a.k2, b.k2]), jnp.concatenate([a.mk, b.mk]),
+        jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a.v2, b.v2),
+        jnp.concatenate([a.valid, b.valid]),
+        jnp.concatenate([a.sign, b.sign])))

@@ -1,0 +1,253 @@
+"""Fine-grain incremental one-step processing (paper Section 3.3).
+
+Pipeline for a delta input ΔD against a preserved job A:
+
+  1. *Incremental Map*: invoke the Map function only on the changed records;
+     edges emitted by '-' records become tombstones (sign = -1).
+  2. *Shuffle*: sort the delta MRBGraph by (K2, MK).
+  3. *State retrieval*: the affected K2 set is queried against the MRBG-Store
+     (host side, read-window policies of Section 3.4/5.2).
+  4. *Merge*: preserved chunks + delta edges are joined with a stable sort;
+     for each (K2, MK) the **last** version wins and tombstones delete
+     (an update arrives as '-' then '+', exactly as in the paper).
+  5. *Incremental Reduce*: segment-reduce only the affected K2 groups and
+     patch the dense result view.
+  6. *State preservation*: merged chunks are appended to the MRBG-Store and
+     the chunk index repointed (obsolete chunks compacted offline).
+
+Everything on-device is jitted with power-of-two bucketed capacities so that
+the work (and the number of distinct XLA programs) scales with |Δ|, not |D|.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import JobSpec, run_onestep
+from repro.core.kvstore import (
+    INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce, make_kv,
+    next_bucket, segment_reduce, sort_edges,
+)
+from repro.core.mrbg_store import MRBGStore
+
+
+class DeltaKV(NamedTuple):
+    """A delta input: kv-pairs marked '+' (insert) or '-' (delete).
+
+    An update is encoded as a deletion followed by an insertion of the same
+    key (paper Section 3.1); both rows carry the same record id so the
+    replayed Map instance overwrites its previous edges.
+    """
+
+    keys: jax.Array          # [N] int32 (K1; semantic only, not used by engine)
+    record_ids: jax.Array    # [N] int32 Map-instance identity (drives MK)
+    values: Any              # pytree of [N, ...]
+    valid: jax.Array         # [N] bool
+    sign: jax.Array          # [N] int8 (+1 / -1)
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def make_delta(keys, record_ids, values, sign, valid=None) -> DeltaKV:
+    keys = jnp.asarray(keys, jnp.int32)
+    if valid is None:
+        valid = jnp.ones(keys.shape[0], jnp.bool_)
+    return DeltaKV(keys, jnp.asarray(record_ids, jnp.int32),
+                   jax.tree.map(jnp.asarray, values),
+                   jnp.asarray(valid, jnp.bool_), jnp.asarray(sign, jnp.int8))
+
+
+class ResultView:
+    """Host-side dense view of the job's current output <K3,V3> (K3 == K2).
+
+    Plays the role of the job's output file on HDFS: incremental runs patch
+    only the affected keys.
+    """
+
+    def __init__(self, num_keys: int, values: Dict[str, np.ndarray],
+                 valid: np.ndarray, counts: np.ndarray):
+        self.num_keys = num_keys
+        self.values = values
+        self.valid = valid
+        self.counts = counts
+
+    @classmethod
+    def from_job(cls, num_keys: int, results, counts) -> "ResultView":
+        values = {n: np.array(a) for n, a in results.values.items()}
+        return cls(num_keys, values, np.array(results.valid),
+                   np.array(counts))
+
+    def patch(self, keys: np.ndarray, values: Dict[str, np.ndarray],
+              counts: np.ndarray) -> None:
+        keys = np.asarray(keys)
+        sel = keys < self.num_keys
+        k = keys[sel]
+        for name, arr in values.items():
+            self.values[name][k] = np.asarray(arr)[sel]
+        self.counts[k] = np.asarray(counts)[sel]
+        self.valid[k] = self.counts[k] > 0
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        return {n: np.where(
+            self.valid.reshape((-1,) + (1,) * (a.ndim - 1)), a, 0)
+            for n, a in self.values.items()}
+
+
+class IncrementalJob:
+    """Owns the preserved MRBGraph + result view of one MapReduce job."""
+
+    def __init__(self, spec: JobSpec, value_bytes: int = 8,
+                 policy: str = "multi-dynamic-window"):
+        self.spec = spec
+        self.store = MRBGStore(spec.num_keys, value_bytes, policy=policy)
+        self.view: Optional[ResultView] = None
+
+    # -- initial run -------------------------------------------------------
+    def initial_run(self, inp: KV) -> ResultView:
+        res = run_onestep(self.spec, inp, preserve=True)
+        host = edges_to_host(res.edges)
+        self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
+        self.view = ResultView.from_job(self.spec.num_keys, res.results,
+                                        res.counts)
+        return self.view
+
+    # -- incremental run ---------------------------------------------------
+    def incremental_run(self, delta: DeltaKV) -> ResultView:
+        assert self.view is not None, "initial_run first"
+        stats = incremental_onestep(self.spec, delta, self.store, self.view)
+        return self.view
+
+    def refresh_stats(self) -> Dict[str, Any]:
+        return {"store_batches": self.store.n_batches,
+                "store_bytes": self.store.file_bytes(),
+                "live_bytes": self.store.live_bytes(),
+                "io": self.store.stats}
+
+
+def _v2_dict(v2) -> Dict[str, np.ndarray]:
+    if isinstance(v2, dict):
+        return v2
+    return {"v": v2}
+
+
+def _v2_tree(v2_dict, template):
+    if isinstance(template, dict):
+        return v2_dict
+    return v2_dict["v"]
+
+
+# ---------------------------------------------------------------------------
+# The jitted incremental kernel: delta map -> merge -> incremental reduce
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _delta_map(spec_static, delta: DeltaKV) -> Edges:
+    map_fn, = spec_static
+    kv = KV(delta.keys, delta.values, delta.valid)
+    edges = map_fn(kv, delta.sign)
+    return sort_edges(edges)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _merge_reduce(reducer: Reducer, key_cap: int,
+                  pres: Edges, delta: Edges, affected_keys: jax.Array):
+    """Join preserved chunks with delta edges; reduce affected groups.
+
+    ``affected_keys`` is sorted ascending, padded with INVALID_KEY.
+    Returns (merged edges [sorted, valid-masked], values pytree [key_cap],
+    counts [key_cap]).
+    """
+    # concat; preserved rows first so that equal-(k2,mk) delta rows override
+    k2 = jnp.concatenate([pres.k2, delta.k2])
+    mk = jnp.concatenate([pres.mk, delta.mk])
+    valid = jnp.concatenate([pres.valid, delta.valid])
+    sign = jnp.concatenate([pres.sign, delta.sign])
+    v2 = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pres.v2, delta.v2)
+    merged = sort_edges(Edges(k2, mk, v2, valid, sign), num_keys=2)
+
+    # last-writer-wins per (k2, mk); tombstones delete
+    nk2 = jnp.roll(merged.k2, -1)
+    nmk = jnp.roll(merged.mk, -1)
+    n = merged.k2.shape[0]
+    is_last = jnp.logical_or(
+        jnp.arange(n) == n - 1,
+        jnp.logical_or(nk2 != merged.k2, nmk != merged.mk))
+    live = merged.valid & is_last & (merged.sign > 0)
+    merged = Edges(merged.k2, merged.mk, merged.v2, live,
+                   jnp.ones(n, jnp.int8))
+
+    # route each edge to its affected-key slot
+    local = jnp.searchsorted(affected_keys, merged.k2).astype(jnp.int32)
+    in_set = jnp.take(affected_keys,
+                      jnp.clip(local, 0, key_cap - 1)) == merged.k2
+    acc, counts = segment_reduce(reducer, local, merged.v2,
+                                 merged.valid & in_set, key_cap)
+    values = finalize_reduce(reducer, affected_keys, acc, counts)
+    return merged, values, counts
+
+
+def incremental_onestep(spec: JobSpec, delta: DeltaKV, store: MRBGStore,
+                        view: ResultView) -> Dict[str, Any]:
+    """One incremental refresh; patches ``view`` and ``store`` in place."""
+    # 1-2) incremental Map + shuffle of the delta MRBGraph
+    delta_edges = _delta_map((spec.map_fn,), delta)
+    dh = edges_to_host(delta_edges, sorted_valid_first=True)
+
+    # 3) affected keys, queried against the store in sorted order
+    affected = np.unique(dh["k2"])
+    if affected.size == 0:
+        return {"affected": 0, "merged": 0}
+    pk2, pmk, pv2, _plen = store.query(affected)
+    if pv2 is None:
+        pv2 = {n: np.zeros((0,) + a.shape[1:], a.dtype)
+               for n, a in _v2_dict(dh["v2"]).items()}
+
+    # 4-5) pad to buckets and run the jitted merge+reduce
+    key_cap = next_bucket(affected.size, 64)
+    pres_cap = next_bucket(max(int(pk2.shape[0]), 1), 64)
+    delta_cap = next_bucket(max(int(dh["k2"].shape[0]), 1), 64)
+
+    pres = _pad_edges(pk2, pmk, pv2, np.ones(pk2.shape[0], np.int8), pres_cap)
+    dsign = np.asarray(dh["sign"], np.int8)
+    delt = _pad_edges(dh["k2"], dh["mk"], _v2_dict(dh["v2"]), dsign, delta_cap)
+    keys_pad = np.full(key_cap, np.int32(2**31 - 1), np.int32)
+    keys_pad[:affected.size] = affected.astype(np.int32)
+
+    merged, values, counts = _merge_reduce(spec.reducer, key_cap, pres, delt,
+                                           jnp.asarray(keys_pad))
+
+    # 6) preserve merged chunks + patch results
+    mh = edges_to_host(merged)
+    store.append(mh["k2"], mh["mk"], _v2_dict(mh["v2"]))
+    counts_h = np.asarray(counts)[:affected.size]
+    gone = affected[counts_h == 0]
+    store.mark_deleted(gone)
+    vals_h = {n: np.asarray(a)[:affected.size]
+              for n, a in _v2_dict(values).items()}
+    view.patch(affected, vals_h, counts_h)
+    return {"affected": int(affected.size), "merged": int(mh["k2"].shape[0]),
+            "deleted_keys": int(gone.size)}
+
+
+def _pad_edges(k2: np.ndarray, mk: np.ndarray, v2: Dict[str, np.ndarray],
+               sign: np.ndarray, cap: int) -> Edges:
+    n = int(k2.shape[0])
+    ik = np.int32(2**31 - 1)
+    out_k2 = np.full(cap, ik, np.int32); out_k2[:n] = k2
+    out_mk = np.full(cap, ik, np.int32); out_mk[:n] = mk
+    out_sign = np.zeros(cap, np.int8); out_sign[:n] = sign
+    valid = np.zeros(cap, bool); valid[:n] = True
+    out_v2 = {}
+    for name, a in v2.items():
+        buf = np.zeros((cap,) + a.shape[1:], a.dtype)
+        buf[:n] = a
+        out_v2[name] = buf
+    return Edges(jnp.asarray(out_k2), jnp.asarray(out_mk),
+                 jax.tree.map(jnp.asarray, out_v2),
+                 jnp.asarray(valid), jnp.asarray(out_sign))

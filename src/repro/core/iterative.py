@@ -1,0 +1,158 @@
+"""General-purpose iterative MapReduce model (paper Section 4).
+
+Two kinds of data:
+
+  * **structure** kv-pairs <SK, SV>: loop-invariant (graph adjacency, points,
+    matrix blocks).  Dense SK record ids in [0, num_struct).
+  * **state** kv-pairs <DK, DV>: loop-variant, updated by each iteration's
+    prime Reduce.  Dense DK ids in [0, num_state).
+
+``project(SK) -> DK`` declares the interdependency (one-to-one/many-to-one
+after the Fig. 5 normalization; all-to-one is expressed with
+``replicate_state=True``, the paper's "smaller number of state kv-pairs"
+case).
+
+The Hadoop mechanics — co-partitioning by hash(project(SK)), sorted
+structure/state file merge-join, Reduce-to-Map local loopback — map onto the
+TPU as: state lives as a dense HBM array indexed by DK, the merge-join is a
+``jnp.take`` gather (state is co-resident, so the paper's "no backward
+transfer" is the degenerate local case), and the prime loop is a jitted
+``step`` reused across iterations (the analogue of keeping jobs alive across
+iterations instead of paying job startup).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kvstore import (
+    KV, Edges, Reducer, finalize_reduce, segment_reduce, sort_edges,
+)
+
+# prime Map: map_fn(struct_kv, state_dv, record_sign) -> Edges
+#   state_dv is the gathered DV pytree aligned to the structure records
+#   ([N, ...]), or the *whole* state pytree when replicate_state=True.
+IterMapFn = Callable[[KV, Any, jax.Array], Edges]
+
+
+@dataclass(frozen=True)
+class IterSpec:
+    map_fn: IterMapFn
+    reducer: Reducer
+    project: Callable[[jax.Array], jax.Array]    # [N] SK -> [N] DK
+    num_state: int
+    init_state: Callable[[jax.Array], Any]       # [K] DK -> DV pytree
+    # difference(DV_curr, DV_prev) -> [K] per-key change magnitude
+    difference: Callable[[Any, Any], jax.Array] = None  # type: ignore
+    replicate_state: bool = False                # all-to-one (Kmeans)
+    stable_topology: bool = True                 # map K2 fanout fixed per SK
+    name: str = "iter_job"
+
+
+def default_difference(curr: Dict[str, jax.Array],
+                       prev: Dict[str, jax.Array]) -> jax.Array:
+    """Max-abs change across all DV leaves, per state key."""
+    diffs = []
+    for n in curr:
+        d = jnp.abs(curr[n].astype(jnp.float32) - prev[n].astype(jnp.float32))
+        diffs.append(d.reshape(d.shape[0], -1).max(axis=1))
+    return functools.reduce(jnp.maximum, diffs)
+
+
+class State:
+    """Dense loop-variant state <DK, DV> (device-resident)."""
+
+    def __init__(self, values: Dict[str, jax.Array], valid: jax.Array):
+        self.values = values
+        self.valid = valid
+
+    @classmethod
+    def init(cls, spec: IterSpec) -> "State":
+        dks = jnp.arange(spec.num_state, dtype=jnp.int32)
+        return cls(spec.init_state(dks), jnp.ones(spec.num_state, jnp.bool_))
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        return {n: np.array(a) for n, a in self.values.items()}
+
+
+# ---------------------------------------------------------------------------
+# One full (non-incremental) iteration
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _iter_step(spec_static, preserve: bool, struct: KV, state_values: Any,
+               dks: jax.Array):
+    """One prime Map -> shuffle -> prime Reduce pass over the full input."""
+    map_fn, reducer, project, num_state, replicate = spec_static
+    if replicate:
+        dv = state_values
+    else:
+        dv = jax.tree.map(lambda a: jnp.take(a, dks, axis=0), state_values)
+    sign = jnp.ones(struct.capacity, jnp.int8)
+    edges = map_fn(struct, dv, sign)
+    acc, counts = segment_reduce(reducer, edges.k2, edges.v2, edges.valid,
+                                 num_state)
+    keys = jnp.arange(num_state, dtype=jnp.int32)
+    new_values = finalize_reduce(reducer, keys, acc, counts)
+    preserved = sort_edges(edges) if preserve else None
+    return new_values, counts, preserved
+
+
+def run_iterative(spec: IterSpec, struct: KV, state: Optional[State] = None,
+                  *, max_iters: int = 50, tol: float = 1e-4,
+                  preserve_last: bool = False,
+                  on_iteration: Optional[Callable] = None):
+    """Run the prime loop to convergence (iterMR recomp mode).
+
+    Returns (state, history dict).  ``preserve_last`` additionally returns the
+    final iteration's MRBGraph edges (to seed incremental jobs, Section 5.1).
+    """
+    if state is None:
+        state = State.init(spec)
+    diff_fn = spec.difference or default_difference
+    spec_static = (spec.map_fn, spec.reducer, spec.project, spec.num_state,
+                   spec.replicate_state)
+    dks = spec.project(struct.keys) if not spec.replicate_state else \
+        jnp.zeros(struct.capacity, jnp.int32)
+    history = {"iters": 0, "max_change": []}
+    edges = None
+    counts = None
+    for it in range(max_iters):
+        want_edges = preserve_last
+        new_values, counts, edges = _iter_step(spec_static, want_edges,
+                                               struct, state.values, dks)
+        change = diff_fn(new_values, state.values)
+        max_change = float(jnp.max(jnp.where(state.valid, change, 0.0)))
+        state = State(new_values, state.valid)
+        history["iters"] = it + 1
+        history["max_change"].append(max_change)
+        if on_iteration is not None:
+            on_iteration(it, state, max_change)
+        if max_change < tol:
+            break
+    history["counts"] = counts
+    history["last_edges"] = edges
+    return state, history
+
+
+def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
+              **kw):
+    """plainMR recomp baseline: same math, but models vanilla-MapReduce cost
+    by re-shuffling the *structure* data every iteration (the extra join job
+    of Algorithm 5 / HaLoop).  Used by the benchmark harness for the cost
+    comparison; results are identical to :func:`run_iterative`."""
+    def on_it(it, st, ch):
+        # the extra structure shuffle: sort structure kv-pairs by key and
+        # gather every value column through the permutation
+        iota = jnp.arange(struct.keys.shape[0], dtype=jnp.int32)
+        _, perm = jax.lax.sort((struct.keys, iota), num_keys=1)
+        _ = jax.tree.map(lambda a: jnp.take(a, perm, axis=0).block_until_ready()
+                         if hasattr(a, 'block_until_ready') else a,
+                         struct.values)
+    kw.setdefault("on_iteration", on_it)
+    return run_iterative(spec, struct, state, **kw)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa
+    DeltaStream, LMDataConfig, lm_batch_at_step, lm_batches, synthetic_tokens,
+)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel module provides the ``pl.pallas_call`` kernel with explicit
+BlockSpec VMEM tiling; ``ops.py`` holds the jitted wrappers and ``ref.py``
+the pure-jnp oracles.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python); on TPU the same code lowers natively.  The
+hardware adaptation: MapReduce's Reduce becomes a one-hot MXU
+segment-matmul; the shuffle sort becomes an in-VMEM bitonic network;
+PageRank's gather-scatter becomes output-block-tiled one-hot accumulation;
+attention uses the standard streaming-softmax flash schedule.
+"""

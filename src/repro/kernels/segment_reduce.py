@@ -1,0 +1,88 @@
+"""Segment reduction as an MXU one-hot matmul (the Reduce stage on TPU).
+
+Hadoop's Reduce iterates a key's value list with scalar code; a TPU wants
+matrix units.  For a tile of R rows with segment ids ``seg[R]`` and values
+``vals[R, D]``, the per-tile contribution to the output block [K, D] is
+
+    onehot(seg)[R, K]^T @ vals[R, D]     (one 128x128-aligned MXU matmul)
+
+The grid walks (row tiles x output blocks); each output block stays
+resident in VMEM across the row-tile loop (BlockSpec index_map pins it),
+accumulating partial sums — the classic stationary-output tiling.
+
+ref.py oracle: ``segment_reduce_ref`` (jax.ops.segment_sum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 512      # rows per tile
+DEFAULT_KBLK = 512      # output segments per block
+
+
+def _kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
+    i = pl.program_id(0)      # row tile
+    j = pl.program_id(1)      # output block
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]                        # [rows]
+    vals = val_ref[...]                       # [rows, D]
+    base = j * kblk
+    local = seg - base
+    onehot = (local[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
+    onehot = onehot.astype(vals.dtype)
+    out_ref[...] += jnp.dot(onehot.T, vals,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "rows", "kblk",
+                                    "interpret"))
+def segment_reduce_mxu(seg: jax.Array, vals: jax.Array, num_segments: int,
+                       *, rows: int = DEFAULT_ROWS, kblk: int = DEFAULT_KBLK,
+                       interpret: bool = True) -> jax.Array:
+    """seg [N] int32 (invalid rows: any id >= num_segments), vals [N, D].
+
+    Returns [num_segments, D] sums in float32.
+    """
+    n, d = vals.shape
+    rows = min(rows, n)
+    if n % rows != 0:
+        pad = rows - n % rows
+        seg = jnp.concatenate([seg, jnp.full(pad, num_segments, seg.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad, d), vals.dtype)])
+        n = seg.shape[0]
+    kblk = min(kblk, max(num_segments, 1))
+    kpad = (kblk - num_segments % kblk) % kblk
+    kfull = num_segments + kpad
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kblk=kblk, rows=rows),
+        grid=(n // rows, kfull // kblk),
+        in_specs=[
+            pl.BlockSpec((rows,), lambda i, j: (i,)),
+            pl.BlockSpec((rows, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((kblk, d), lambda i, j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((kfull, d), jnp.float32),
+        interpret=interpret,
+    )(seg.astype(jnp.int32), vals)
+    return out[:num_segments]
+
+
+def segment_reduce_ref(seg: jax.Array, vals: jax.Array,
+                       num_segments: int) -> jax.Array:
+    """Pure-jnp oracle."""
+    seg = jnp.where(seg < num_segments, seg, num_segments)
+    out = jax.ops.segment_sum(vals.astype(jnp.float32), seg,
+                              num_segments=num_segments + 1)
+    return out[:num_segments]

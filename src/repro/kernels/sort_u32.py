@@ -1,0 +1,87 @@
+"""In-VMEM bitonic sort of (key, payload) pairs — the shuffle-sort on TPU.
+
+Hadoop's shuffle sorts spill files with comparison mergesort on the CPU;
+the TPU analogue is a data-parallel bitonic network over a VMEM-resident
+tile: log²(T) compare-exchange stages, each a vectorized select between a
+tile and its stride-permuted self (no data-dependent control flow, VPU
+friendly).  Larger inputs are handled by the host-side run-merge in
+MRBG-Store (this kernel is the per-tile building block).
+
+Payload rides along as a second lane (values permuted with the keys).
+
+ref.py oracle: ``sort_kv32_ref`` (jnp.argsort gather).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _stage(keys, payload, j, k):
+    n = keys.shape[0]
+    idx = jax.lax.iota(jnp.int32, n)
+    partner = jnp.bitwise_xor(idx, j)
+    pk = keys[partner]
+    pp = payload[partner]
+    up = (jnp.bitwise_and(idx, k) == 0)          # ascending region?
+    is_lo = idx < partner
+    keep = jnp.where(up == is_lo, jnp.minimum(keys, pk),
+                     jnp.maximum(keys, pk))
+    # equal keys: min == max == own key, so both sides keep their own
+    # payload — a valid (if unstable) permutation
+    take_self = keep == keys
+    newp = jnp.where(take_self, payload, pp)
+    return keep, newp
+
+
+def _kernel(k_ref, p_ref, ko_ref, po_ref, *, length: int):
+    keys = k_ref[...]
+    payload = p_ref[...]
+    k = 2
+    while k <= length:
+        j = k // 2
+        while j >= 1:
+            keys, payload = _stage(keys, payload, j, k)
+            j //= 2
+        k *= 2
+    ko_ref[...] = keys
+    po_ref[...] = payload
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_kv32(keys: jax.Array, payload: jax.Array, *,
+              interpret: bool = True):
+    """Sort uint32/int32 ``keys`` ascending, permuting int32 ``payload``.
+
+    Length is padded to the next power of two with key = max_uint32.
+    """
+    n = keys.shape[0]
+    m = 1
+    while m < n:
+        m *= 2
+    if m != n:
+        keys = jnp.concatenate(
+            [keys, jnp.full(m - n, jnp.iinfo(jnp.uint32).max, keys.dtype)])
+        payload = jnp.concatenate(
+            [payload, jnp.zeros(m - n, payload.dtype)])
+    ko, po = pl.pallas_call(
+        functools.partial(_kernel, length=m),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m,), lambda i: (0,)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((m,), lambda i: (0,)),
+                   pl.BlockSpec((m,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), keys.dtype),
+                   jax.ShapeDtypeStruct((m,), payload.dtype)],
+        interpret=interpret,
+    )(keys, payload)
+    return ko[:n], po[:n]
+
+
+def sort_kv32_ref(keys, payload):
+    order = jnp.argsort(keys, stable=True)
+    return jnp.take(keys, order), jnp.take(payload, order)

@@ -1,0 +1,89 @@
+"""ELL-format SpMV for PageRank-style propagation (Map+shuffle+Reduce fused).
+
+PageRank's per-iteration work is y[j] += x[i]/deg(i) over edges (i -> j).
+On GPU this is a gather/scatter; the TPU adaptation tiles the *output*
+vertex range into VMEM-resident blocks and turns the scatter into a one-hot
+MXU matmul per (row-tile, output-block) grid cell:
+
+    contrib[T·F] = x[rows]/deg broadcast over the padded neighbor slots
+    y_blk += onehot(nbrs - blk_start)[T·F, KBLK]^T @ contrib[T·F, 1]
+
+The output block is stationary in VMEM across the row-tile loop; invalid
+slots (nbr = -1) land outside every block.  This is the fused form of
+kernels/segment_reduce specialized to the graph workload the paper evaluates.
+
+ref.py oracle: ``spmv_ell_ref`` (segment_sum over flattened edges).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 256
+DEFAULT_KBLK = 1024
+
+
+def _kernel(nbr_ref, contrib_ref, out_ref, *, rows: int, kblk: int, f: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbrs = nbr_ref[...].reshape(rows * f)            # [T*F]
+    contrib = contrib_ref[...].reshape(rows * f, 1)  # [T*F, 1]
+    local = nbrs - j * kblk
+    onehot = (local[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (rows * f, kblk), 1))
+    out_ref[...] += jnp.dot(onehot.astype(contrib.dtype).T, contrib,
+                            preferred_element_type=out_ref.dtype)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "rows", "kblk",
+                                             "interpret"))
+def spmv_ell(nbrs: jax.Array, contrib: jax.Array, num_vertices: int, *,
+             rows: int = DEFAULT_ROWS, kblk: int = DEFAULT_KBLK,
+             interpret: bool = True) -> jax.Array:
+    """nbrs [S, F] int32 (-1 padding), contrib [S, F] float32.
+
+    Returns y [num_vertices] with y[j] = sum of contrib over edges into j.
+    """
+    s, f = nbrs.shape
+    rows_ = min(rows, s)
+    if s % rows_ != 0:
+        pad = rows_ - s % rows_
+        nbrs = jnp.concatenate([nbrs, jnp.full((pad, f), -1, nbrs.dtype)])
+        contrib = jnp.concatenate([contrib,
+                                   jnp.zeros((pad, f), contrib.dtype)])
+        s = nbrs.shape[0]
+    kblk_ = min(kblk, max(num_vertices, 1))
+    kpad = (kblk_ - num_vertices % kblk_) % kblk_
+    kfull = num_vertices + kpad
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, rows=rows_, kblk=kblk_, f=f),
+        grid=(s // rows_, kfull // kblk_),
+        in_specs=[
+            pl.BlockSpec((rows_, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows_, f), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((kblk_,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((kfull,), jnp.float32),
+        interpret=interpret,
+    )(nbrs.astype(jnp.int32), contrib.astype(jnp.float32))
+    return y[:num_vertices]
+
+
+def spmv_ell_ref(nbrs, contrib, num_vertices: int):
+    flat_n = nbrs.reshape(-1)
+    flat_c = contrib.reshape(-1).astype(jnp.float32)
+    seg = jnp.where((flat_n >= 0) & (flat_n < num_vertices), flat_n,
+                    num_vertices)
+    out = jax.ops.segment_sum(jnp.where(seg < num_vertices, flat_c, 0.0),
+                              seg, num_segments=num_vertices + 1)
+    return out[:num_vertices]

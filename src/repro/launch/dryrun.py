@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the jitted train/prefill/serve step with ShapeDtypeStruct
+     stand-ins (no allocation),
+  3. compiles, prints memory_analysis() / cost_analysis(),
+  4. parses the collective ops (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) out of the compiled HLO and sums their
+     operand bytes,
+  5. writes everything to artifacts/dryrun/<arch>__<shape>__<mesh>.json
+     for the roofline analysis (launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_TUPLE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*\(([^)]*)\)")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op, by kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind, dtype, dims = m.groups()
+        out[kind] = out.get(kind, 0) + _shape_bytes(dtype, dims)
+    for m in _TUPLE_RE.finditer(hlo_text):
+        kind, inner = m.groups()
+        for part in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", inner):
+            out[kind] = out.get(kind, 0) + _shape_bytes(*part.groups())
+    return out
+
+
+def _fix_rules_for_mesh(cfg, multi_pod: bool):
+    from repro.models.config import ShardingRules
+    if multi_pod:
+        return cfg
+    # single-pod mesh has no "pod" axis: drop it from batch sharding
+    rules = cfg.sharding
+    import dataclasses
+    batch = tuple(a for a in rules.batch if a != "pod")
+    return cfg.replace(sharding=dataclasses.replace(rules, batch=batch))
+
+
+def _compile_once(cfg, cell, mesh):
+    from repro.launch.steps import input_specs
+    from repro.models import meshctx
+    meshctx.set_mesh(mesh)
+    t0 = time.time()
+    with mesh:
+        step, args = input_specs(cfg, cell, mesh)
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+    return {
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes": float(cost.get("bytes accessed", -1)),
+        "coll": coll,
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+
+
+def _probe_cfg(cfg, k: int):
+    """Unrolled k-cycle config for per-layer cost extrapolation.
+
+    ``jax.jit``-compiled scans report the while-body cost ONCE, so the
+    full-model compile under-counts flops by ~n_layers; two unrolled probes
+    (k=1, 2) recover the per-cycle cost exactly.
+    """
+    n_layers = len(cfg.prefix_blocks) + len(cfg.block_pattern) * k
+    return cfg.replace(n_layers=n_layers, scan_layers=False)
+
+
+def dryrun_cell(arch: str, shape: str, multi_pod: bool,
+                overrides=None, tag: str = "baseline",
+                verbose: bool = True, probes: bool = True):
+    import repro.configs as C
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES
+
+    cfg = C.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cfg = _fix_rules_for_mesh(cfg, multi_pod)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    meshname = "pod2x16x16" if multi_pod else "pod16x16"
+
+    full = _compile_once(cfg, cell, mesh)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": meshname, "tag": tag,
+        "devices": int(mesh.devices.size),
+        "cycles": cfg.cycles,
+        "full": full,
+    }
+
+    if probes:
+        p1 = _compile_once(_probe_cfg(cfg, 1), cell, mesh)
+        p2 = _compile_once(_probe_cfg(cfg, 2), cell, mesh)
+        per_cycle_fl = p2["flops"] - p1["flops"]
+        per_cycle_by = p2["bytes"] - p1["bytes"]
+        rem_frac = len(cfg.remainder_blocks) / len(cfg.block_pattern)
+        scale = (cfg.cycles - 1) + rem_frac
+        est = {
+            "flops_per_device": p1["flops"] + per_cycle_fl * scale,
+            "bytes_per_device": p1["bytes"] + per_cycle_by * scale,
+            "collective_bytes_per_device": {},
+        }
+        kinds = set(p1["coll"]) | set(p2["coll"])
+        for kk in kinds:
+            c1, c2 = p1["coll"].get(kk, 0), p2["coll"].get(kk, 0)
+            est["collective_bytes_per_device"][kk] = c1 + (c2 - c1) * scale
+        rec["probe1"] = p1
+        rec["probe2"] = p2
+        rec["estimated"] = est
+
+    if verbose:
+        print(f"[{arch} x {shape} x {meshname} x {tag}] "
+              f"lower {full['lower_s']:.0f}s compile {full['compile_s']:.0f}s")
+        print("  memory_analysis:", full["memory"])
+        if probes:
+            print("  est flops/dev %.3e bytes/dev %.3e" %
+                  (rec["estimated"]["flops_per_device"],
+                   rec["estimated"]["bytes_per_device"]))
+            print("  est collective bytes/dev:",
+                  {k: f"{v:.3e}" for k, v in
+                   rec["estimated"]["collective_bytes_per_device"].items()})
+    ART.mkdir(parents=True, exist_ok=True)
+    out = ART / f"{arch}__{shape}__{meshname}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides: key=value (int/float/str)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for conv in (int, float):
+            try:
+                v = conv(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    import repro.configs as C
+
+    cells = []
+    if args.all:
+        cells = C.all_cells()
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshname = "pod2x16x16" if args.multi_pod else "pod16x16"
+    failures = []
+    for arch, shape in cells:
+        path = ART / f"{arch}__{shape}__{meshname}__{args.tag}.json"
+        if args.skip_existing and path.exists():
+            print(f"skip {arch} x {shape} (exists)")
+            continue
+        try:
+            dryrun_cell(arch, shape, args.multi_pod, tag=args.tag,
+                        overrides=overrides or None)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, str(e)[:200]))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

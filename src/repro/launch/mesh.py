@@ -1,0 +1,34 @@
+"""Production mesh construction (single-pod 16x16 and multi-pod 2x16x16).
+
+Defined as functions so importing this module never touches jax device
+state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# TPU v5e hardware constants used across the roofline analysis
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~uni-directional)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_single_pod_with_pod_axis() -> Mesh:
+    """(1, 16, 16) so the same ("pod","data","model") specs work 1-pod."""
+    return jax.make_mesh((1, 16, 16), ("pod", "data", "model"))
+
+
+def make_host_mesh(n: int = 8, axes=("data", "model")) -> Mesh:
+    """Small mesh over forced host devices for tests."""
+    devs = np.array(jax.devices()[:n])
+    if len(axes) == 2:
+        return Mesh(devs.reshape(2, n // 2), axes)
+    return Mesh(devs.reshape((1, 2, n // 2)), axes)

@@ -1,0 +1,198 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+For every (arch x shape x mesh x tag) JSON produced by launch/dryrun.py:
+
+  compute term    = HLO_flops_per_device / 197 TFLOP/s        (bf16, v5e)
+  memory term     = HLO_bytes_per_device / 819 GB/s
+  collective term = collective_bytes_per_device / 50 GB/s     (ICI per chip)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N_active·B (decode),
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPS, the dominant term, and the
+roofline fraction
+
+  RF = (MODEL_FLOPS / (devices · peak)) / max(terms)
+
+i.e. "ideal useful-compute time over modeled execution time" — RF = 1 means
+the step is pure, perfectly-overlapped useful matmul.
+
+Usage: python -m repro.launch.roofline [--tag baseline] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_params(cfg) -> int:
+    """Total parameter count from the declarative plan."""
+    import numpy as np
+    from repro.models import lm as lmm
+    from repro.models.common import ParamSpec
+    import jax
+    plan = lmm.plan_model(cfg)
+    leaves = jax.tree.leaves(plan,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def active_params(cfg) -> int:
+    """Active (per-token) parameters: subtract unrouted experts."""
+    total = model_params(cfg)
+    if cfg.moe is None:
+        return total
+    per_expert = cfg.d_model * 2 * cfg.moe.d_ff_expert + \
+        cfg.moe.d_ff_expert * cfg.d_model
+    n_moe_layers = sum(1 for k in (cfg.prefix_blocks +
+                                   cfg.block_pattern * cfg.cycles +
+                                   cfg.remainder_blocks)
+                       if k == "attn_moe")
+    return total - n_moe_layers * (cfg.moe.num_experts - cfg.moe.top_k) * \
+        per_expert
+
+
+def model_flops(arch: str, shape: str, devices: int) -> float:
+    import repro.configs as C
+    from repro.models.config import SHAPES
+    cfg = C.get(arch)
+    cell = SHAPES[shape]
+    n_act = active_params(cfg)
+    if cfg.embed_inputs:
+        # embeddings don't do matmul work per token
+        n_act -= cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 0)
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n_act * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + attention over the KV cache
+    import math
+    attn = 0.0
+    if cfg.family not in ("xlstm",):
+        kv_read = 4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * \
+            min(cell.seq_len, 10**9)
+        attn = kv_read * cell.global_batch
+    return 2.0 * n_act * cell.global_batch + attn
+
+
+def useful_decode_bytes(arch: str, shape: str) -> float:
+    """Minimum HBM traffic for one decode step: read every live parameter
+    once + read the KV/recurrent cache once (global bytes)."""
+    import numpy as np
+    import jax
+    import repro.configs as C
+    from repro.models import lm as lmm
+    from repro.models.common import ParamSpec
+    from repro.models.config import SHAPES
+    cfg = C.get(arch)
+    cell = SHAPES[shape]
+    pbytes = 2.0 * active_params(cfg)          # bf16
+    cplan = lmm.plan_caches(cfg, cell.global_batch, cell.seq_len)
+    cplan["pos"] = ParamSpec((), (), "zeros")
+    leaves = jax.tree.leaves(cplan,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    cbytes = 2.0 * sum(int(np.prod(s.shape)) for s in leaves)
+    return pbytes + cbytes
+
+
+def analyze(rec: dict) -> dict:
+    est = rec.get("estimated") or {
+        "flops_per_device": rec["full"]["flops"],
+        "bytes_per_device": rec["full"]["bytes"],
+        "collective_bytes_per_device": rec["full"]["coll"],
+    }
+    devices = rec["devices"]
+    fl = est["flops_per_device"]
+    by = est["bytes_per_device"]
+    coll = sum(est["collective_bytes_per_device"].values())
+    t_compute = fl / PEAK_FLOPS
+    t_memory = by / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"], devices)
+    t_step = max(terms.values())
+    from repro.models.config import SHAPES
+    is_decode = SHAPES[rec["shape"]].kind == "decode"
+    if is_decode:
+        # decode is inherently memory-bound: the roofline resource is HBM.
+        ub = useful_decode_bytes(rec["arch"], rec["shape"])
+        t_ideal = (ub / devices) / HBM_BW
+        useful = ub / max(by * devices, 1e-9)
+    else:
+        t_ideal = mf / (devices * PEAK_FLOPS)
+        useful = mf / max(fl * devices, 1e-9)
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": t_ideal / max(t_step, 1e-30),
+        "roofline_kind": "memory(HBM)" if is_decode else "compute(MXU)",
+        "t_step_s": t_step,
+        "temp_gib": (rec["full"]["memory"]["temp_size"] or 0) / 2**30,
+        "args_gib": (rec["full"]["memory"]["argument_size"] or 0) / 2**30,
+    }
+
+
+def load_all(tag: str, mesh: str = "pod16x16"):
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh}__{tag}.json")):
+        rec = json.loads(f.read_text())
+        if rec["arch"] == "qwen3-1.7b":   # alias duplicate of qwen3_1_7b
+            continue
+        try:
+            rec["analysis"] = analyze(rec)
+        except Exception as e:
+            rec["analysis"] = {"error": str(e)}
+        out.append(rec)
+    return out
+
+
+def markdown_table(recs) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | RF | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        a = r["analysis"]
+        if "error" in a:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERR {a['error']} "
+                        "| | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {a['t_compute_s']:.3f} "
+            f"| {a['t_memory_s']:.3f} | {a['t_collective_s']:.3f} "
+            f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.3f} | {a['temp_gib']:.0f} |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_all(args.tag, args.mesh)
+    if args.md:
+        print(markdown_table(recs))
+        return
+    for r in recs:
+        a = r["analysis"]
+        if "error" in a:
+            print(f"{r['arch']:26s} {r['shape']:12s} ERR {a['error']}")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} "
+              f"C {a['t_compute_s']:8.3f}s M {a['t_memory_s']:8.3f}s "
+              f"X {a['t_collective_s']:8.3f}s -> {a['dominant']:10s} "
+              f"useful {a['useful_ratio']:5.2f} RF {a['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

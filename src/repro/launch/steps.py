@@ -1,0 +1,131 @@
+"""Jittable train / serve steps + input specs for every (arch x shape) cell.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable ``ShapeDtypeStruct`` stand-ins; nothing is allocated until a real
+driver feeds arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.common import pspec, valid_pspec
+from repro.models.config import ModelConfig, SHAPES, ShapeCell
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            functools.partial(lm.lm_loss, cfg))(params, batch)
+        params, opt_state, info = adamw_update(grads, opt_state, params,
+                                               opt_cfg)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return lm.lm_loss(cfg, params, batch)
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens):
+        return lm.serve_step(cfg, params, caches, tokens)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Inference-prefill: forward pass producing last-token logits."""
+    def prefill_step(params, batch):
+        inputs = batch["inputs"]
+        s = inputs.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                               inputs.shape[:2])
+        hidden, _ = lm.forward(cfg, params, inputs, pos)
+        return lm.logits_fn(cfg, params, hidden[:, -1:, :])
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh]):
+    """Training / prefill batch ShapeDtypeStructs."""
+    rules = cfg.sharding
+    b, s = cell.global_batch, cell.seq_len
+    bsp = valid_pspec(rules, ("batch", None), (b, s), mesh) \
+        if mesh is not None else None
+    if cfg.embed_inputs:
+        inputs = _sds((b, s), jnp.int32, mesh, bsp)
+    else:
+        esp = valid_pspec(rules, ("batch", None, "d_model"),
+                          (b, s, cfg.d_model), mesh) \
+            if mesh is not None else None
+        inputs = _sds((b, s, cfg.d_model), cfg.dtype("compute"), mesh, esp)
+    return {
+        "inputs": inputs,
+        "targets": _sds((b, s), jnp.int32, mesh, bsp),
+        "mask": _sds((b, s), jnp.bool_, mesh, bsp),
+    }
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh]):
+    """(tokens, caches) ShapeDtypeStructs for one serve_step."""
+    rules = cfg.sharding
+    b = cell.global_batch
+    tsp = valid_pspec(rules, ("batch", None), (b, 1), mesh) \
+        if mesh is not None else None
+    tokens = _sds((b, 1), jnp.int32, mesh, tsp)
+    caches = lm.cache_specs(cfg, b, cell.seq_len, mesh)
+    return tokens, caches
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
+                opt_cfg: Optional[AdamWConfig] = None):
+    """Everything ``jit(step).lower(...)`` needs for this cell.
+
+    Returns (step_fn, example_args) where example_args are
+    ShapeDtypeStructs.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    params = lm.param_specs(cfg, mesh)
+    if cell.kind == "train":
+        opt = opt_specs(cfg, mesh, opt_cfg)
+        return make_train_step(cfg, opt_cfg), (params, opt,
+                                               batch_specs(cfg, cell, mesh))
+    if cell.kind == "prefill":
+        return make_prefill_step(cfg), (params, batch_specs(cfg, cell, mesh))
+    tokens, caches = decode_specs(cfg, cell, mesh)
+    return make_serve_step(cfg), (params, caches, tokens)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Optional[Mesh],
+              opt_cfg: AdamWConfig):
+    params = lm.param_specs(cfg, mesh)
+    def conv(p):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(p.shape, opt_cfg.opt_dtype)
+        return jax.ShapeDtypeStruct(p.shape, opt_cfg.opt_dtype,
+                                    sharding=p.sharding)
+    mv = jax.tree.map(conv, params)
+    step = _sds((), jnp.int32, mesh, P())
+    return {"m": mv, "v": mv, "step": step}

@@ -1,0 +1,729 @@
+"""Transformer / recurrent block zoo covering the 10 assigned architectures.
+
+Every block kind provides:
+  * ``plan_<kind>(cfg)``   -> ParamSpec tree
+  * ``apply_<kind>(cfg, p, x, pos, cache)`` -> (y, new_cache)
+
+``cache=None`` means train/prefill over the full sequence; a cache dict means
+single-token decode.  ``pos`` is [B, S] token positions (decode: the current
+position broadcast).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ParamSpec, apply_rope, constrain, rms_norm, rope_table, softcap, swiglu,
+)
+from repro.models.config import ModelConfig
+
+NEG = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, local windows, softcap, qk-norm) and MLA
+# ---------------------------------------------------------------------------
+
+def plan_attention(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "wq": ParamSpec((d, h, hd), ("d_model", "heads", None)),
+        "wk": ParamSpec((d, k, hd), ("d_model", "kv_heads", None)),
+        "wv": ParamSpec((d, k, hd), ("d_model", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "d_model")),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = ParamSpec((hd,), (None,), "zeros")
+        p["k_scale"] = ParamSpec((hd,), (None,), "zeros")
+    if cfg.post_norms:
+        p["post_norm"] = ParamSpec((d,), ("d_model",), "zeros")
+    return p
+
+
+def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, window: int = 0):
+    """q [B,S,H,hd], k/v [B,T,K,hd]; positions give the causal/local mask."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    q = q.reshape(b, s, kh, rep, hd)
+    scores = jnp.einsum("bskrd,btkd->bkrst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    scores = softcap(scores, cfg.attn_softcap)
+    # constrain on the *full* head axis (kh*rep) so GSPMD shards heads evenly
+    from repro.models.config import ModelConfig as _MC  # noqa
+    scores = scores.reshape(b, h, s, t)
+    from repro.models.common import constrain as _constrain
+    scores = _constrain(scores, cfg.sharding, ("batch", "heads", None, None))
+    mask = k_pos[:, None, :] <= q_pos[:, :, None] if cfg.causal else \
+        jnp.ones((b, s, t), bool)
+    if window > 0:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    mask &= (k_pos >= 0)[:, None, :]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    probs = probs.reshape(b, kh, rep, s, t)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return out.reshape(b, s, h, v.shape[-1])   # v head dim may differ (MLA)
+
+
+def _attend_blockwise(cfg: ModelConfig, q, k, v, q_pos, k_pos,
+                      window: int = 0):
+    """Flash-style streaming-softmax attention (scan over KV blocks).
+
+    Algorithmically identical to the Pallas flash kernel in
+    ``repro.kernels.flash_attention`` — this is its XLA lowering for
+    dry-runs/CPU; it never materializes the [S, T] score matrix.
+    """
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    rep = h // kh
+    blk = min(cfg.attn_block, t)
+    if t % blk != 0:
+        return _attend(cfg, q, k, v, q_pos, k_pos, window)
+    nb = t // blk
+    qf = q.reshape(b, s, kh, rep, hd).astype(jnp.float32)
+
+    kb = k.reshape(b, nb, blk, kh, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, blk, kh, vd).swapaxes(0, 1)
+    kpb = k_pos.reshape(b, nb, blk).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, kp = inp
+        sc = jnp.einsum("bskrd,btkd->bkrst", qf, kblk.astype(jnp.float32))
+        sc = sc / (hd ** 0.5)
+        sc = softcap(sc, cfg.attn_softcap)
+        mask = kp[:, None, :] <= q_pos[:, :, None] if cfg.causal else \
+            jnp.ones((b, s, blk), bool)
+        if window > 0:
+            mask &= (q_pos[:, :, None] - kp[:, None, :]) < window
+        mask &= (kp >= 0)[:, None, :]
+        sc = jnp.where(mask[:, None, None, :, :], sc, NEG)
+        mb = jnp.maximum(m, sc.max(axis=-1))
+        corr = jnp.exp(m - mb)
+        pexp = jnp.exp(sc - mb[..., None])
+        l2 = l * corr + pexp.sum(axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bkrst,btkd->bkrsd", pexp, vblk.astype(jnp.float32))
+        return (mb, l2, acc2), None
+
+    m0 = jnp.full((b, kh, rep, s), -jnp.inf)
+    l0 = jnp.zeros((b, kh, rep, s))
+    a0 = jnp.zeros((b, kh, rep, s, vd))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, vd)
+    return out.astype(v.dtype)
+
+
+def attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, window: int = 0):
+    if cfg.attn_impl == "blockwise" and q.shape[1] > 1:
+        return _attend_blockwise(cfg, q, k, v, q_pos, k_pos, window)
+    return _attend(cfg, q, k, v, q_pos, k_pos, window)
+
+
+def apply_attention(cfg: ModelConfig, p, x, pos, cache=None, *,
+                    window: int = 0):
+    """Standard GQA attention; ``window>0`` = sliding-window (local)."""
+    rules = cfg.sharding
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(xn.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(xn.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(xn.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    sin, cos = rope_table(pos, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = constrain(q, rules, ("batch", "seq", "heads", None))
+
+    if cache is None:
+        out = attend(cfg, q, k, v, pos, pos, window)
+        new_cache = None
+    else:
+        ck, cv = cache["k"], cache["v"]
+        cpos = pos.reshape(-1)[0]
+        tmax = ck.shape[1]
+        slot = jnp.mod(cpos, tmax) if window > 0 else cpos
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        idx = jnp.arange(tmax)
+        if window > 0:    # rotating window buffer: slot idx holds position
+            age = jnp.mod(cpos - idx, tmax)      # cpos - age, if written yet
+            k_pos = jnp.where(age <= cpos, cpos - age, -1)
+        else:
+            k_pos = jnp.where(idx <= cpos, idx, -1)
+        b = x.shape[0]
+        k_pos_b = jnp.broadcast_to(k_pos[None, :], (b, tmax))
+        q_pos = jnp.broadcast_to(cpos[None, None], (b, 1))
+        out = _attend(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype),
+                      q_pos, k_pos_b, window)
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if cfg.post_norms:
+        y = rms_norm(y, p["post_norm"], cfg.norm_eps)
+    return x + y, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    window: int = 0):
+    t = min(window, max_len) if window > 0 else max_len
+    k, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": ParamSpec((batch, t, k, hd), ("batch", "kv_seq", "kv_heads",
+                                           None), "zeros"),
+        "v": ParamSpec((batch, t, k, hd), ("batch", "kv_seq", "kv_heads",
+                                           None), "zeros"),
+    }
+
+
+# ----------------------------- MLA (DeepSeek-V3) ---------------------------
+
+def plan_mla(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "wq_a": ParamSpec((d, m.q_lora_rank), ("d_model", None)),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), "zeros"),
+        "wq_b": ParamSpec((m.q_lora_rank, h, qk), (None, "heads", None)),
+        "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("d_model", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), "zeros"),
+        "wk_b": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          (None, "heads", None)),
+        "wv_b": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                          (None, "heads", None)),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", None, "d_model")),
+    }
+
+
+def apply_mla(cfg: ModelConfig, p, x, pos, cache=None):
+    m = cfg.mla
+    rules = cfg.sharding
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    cq = rms_norm(xn @ p["wq_a"].astype(xn.dtype), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cq.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = xn @ p["wkv_a"].astype(xn.dtype)
+    latent = rms_norm(ckv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., m.kv_lora_rank:][:, :, None, :]     # [B,S,1,rope]
+    sin, cos = rope_table(pos, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope, sin, cos)
+
+    if cache is None:
+        # training: expand latent to per-head K/V (MXU-friendly)
+        k_nope = jnp.einsum("bsr,rhk->bshk", latent,
+                            p["wk_b"].astype(latent.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", latent, p["wv_b"].astype(latent.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (rope_d,))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attend(cfg, qfull, k, v, pos, pos)
+        new_cache = None
+    else:
+        # decode: *absorbed* attention in latent space — the KV cache holds
+        # only (latent, k_rope): the MLA memory saving, per DeepSeek-V3.
+        clat, crope = cache["latent"], cache["k_rope"]
+        cpos = pos.reshape(-1)[0]
+        clat = jax.lax.dynamic_update_slice(
+            clat, latent.astype(clat.dtype), (0, cpos, 0))
+        crope = jax.lax.dynamic_update_slice(
+            crope, k_rope[:, :, 0, :].astype(crope.dtype), (0, cpos, 0))
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope,
+                           p["wk_b"].astype(q_nope.dtype))
+        s1 = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        clat.astype(jnp.float32))
+        s2 = jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                        crope.astype(jnp.float32))
+        scores = (s1 + s2) / ((nope + rope_d) ** 0.5)
+        tmax = clat.shape[1]
+        k_pos = jnp.arange(tmax)[None, None, None, :]
+        scores = jnp.where(k_pos <= cpos, scores, NEG)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs,
+                         clat.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_b"].astype(x.dtype))
+        new_cache = {"latent": clat, "k_rope": crope}
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(out.dtype))
+    return x + y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "latent": ParamSpec((batch, max_len, m.kv_lora_rank),
+                            ("batch", "kv_seq", None), "zeros"),
+        "k_rope": ParamSpec((batch, max_len, m.qk_rope_head_dim),
+                            ("batch", "kv_seq", None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense (swiglu / geglu / gelu) and MoE
+# ---------------------------------------------------------------------------
+
+def plan_ffn(cfg: ModelConfig, d_ff: Optional[int] = None,
+             kind: str = "swiglu") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    p = {"norm": ParamSpec((d,), ("d_model",), "zeros")}
+    if kind == "gelu":
+        p["w_in"] = ParamSpec((d, ff), ("d_model", "d_ff"))
+        p["w_out"] = ParamSpec((ff, d), ("d_ff", "d_model"))
+    else:
+        p["w_in"] = ParamSpec((d, 2 * ff), ("d_model", "d_ff"))
+        p["w_out"] = ParamSpec((ff, d), ("d_ff", "d_model"))
+    if cfg.post_norms:
+        p["post_norm"] = ParamSpec((d,), ("d_model",), "zeros")
+    return p
+
+
+def apply_ffn(cfg: ModelConfig, p, x, kind: str = "swiglu"):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    h = xn @ p["w_in"].astype(xn.dtype)
+    h = jax.nn.gelu(h, approximate=True) if kind == "gelu" else swiglu(h, kind)
+    h = constrain(h, cfg.sharding, ("batch", "seq", "d_ff"))
+    y = h @ p["w_out"].astype(h.dtype)
+    if cfg.post_norms:
+        y = rms_norm(y, p["post_norm"], cfg.norm_eps)
+    return x + y
+
+
+def plan_moe(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    mo = cfg.moe
+    d = cfg.d_model
+    p = {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "router": ParamSpec((d, mo.num_experts), ("d_model", None)),
+        "w_in": ParamSpec((mo.num_experts, d, 2 * mo.d_ff_expert),
+                          ("expert", "d_model", None)),
+        "w_out": ParamSpec((mo.num_experts, mo.d_ff_expert, d),
+                           ("expert", None, "d_model")),
+    }
+    if mo.num_shared:
+        ffs = mo.d_ff_shared or mo.d_ff_expert
+        p["shared_in"] = ParamSpec((d, 2 * ffs * mo.num_shared),
+                                   ("d_model", "d_ff"))
+        p["shared_out"] = ParamSpec((ffs * mo.num_shared, d),
+                                    ("d_ff", "d_model"))
+    return p
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    if cfg.moe_impl == "a2a":
+        from repro.models.meshctx import get_mesh
+        mesh = get_mesh()
+        if mesh is not None and all(a in mesh.axis_names
+                                    for a in cfg.moe.ep_axes):
+            return apply_moe_a2a(cfg, p, x, mesh)
+    return apply_moe_gather(cfg, p, x)
+
+
+def apply_moe_a2a(cfg: ModelConfig, p, x, mesh):
+    """Expert-parallel MoE: the paper's shuffle as a first-class LM layer.
+
+    Tokens are hash-partitioned by K2 = expert id and exchanged with ONE
+    ``jax.lax.all_to_all`` over the EP mesh axes (exactly
+    ``core.distributed``'s shuffle); the combine is the segment reduction.
+    Inside the shard_map region each device owns E/P experts (DeepSeek-V3 on
+    the 256-chip pod: exactly one), computes its expert GEMMs on the
+    received capacity buffer, and the return all_to_all routes outputs back.
+
+    vs. the gather/scatter baseline this removes the giant [E, cap_global,
+    d] scatter (GSPMD lowered it to all-gathers of the full token buffer:
+    the 66 TB/device/step catastrophe in the baseline dry-run).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    rules = cfg.sharding
+    b, s, d = x.shape
+    ep_axes = tuple(a for a in mo.ep_axes if a in mesh.axis_names)
+    p_ep = 1
+    for a in ep_axes:
+        p_ep *= mesh.shape[a]
+    e_loc = mo.num_experts // p_ep
+    batch_axes = tuple(a for a in rules.batch if a in mesh.axis_names)
+    seq_ax = "model" if "model" in mesh.axis_names else None
+
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+
+    def local_moe(xn_l, router, w_in, w_out):
+        # xn_l [B_loc, S_loc, d]; router [d, E]; w_in [E_loc, d, 2ff]
+        bl, sl, _ = xn_l.shape
+        toks = xn_l.reshape(bl * sl, d)
+        n = toks.shape[0]
+        logits = toks.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eid = jax.lax.top_k(probs, mo.top_k)            # [n, K]
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        # shuffle: bucket (token, k) slots by destination EP shard
+        cap = int(n * mo.top_k * mo.capacity_factor) // p_ep + 1
+        cap = max(cap, min(n * mo.top_k, 32))
+        dest = (eid // e_loc).reshape(-1)                     # [n*K]
+        order = jnp.argsort(dest)
+        sdest = jnp.take(dest, order)
+        rank = jnp.arange(n * mo.top_k) - jnp.searchsorted(sdest, sdest,
+                                                           side="left")
+        ok = rank < cap
+        send = jnp.zeros((p_ep, cap, d), toks.dtype)
+        tok_idx = order // mo.top_k
+        send = send.at[jnp.where(ok, sdest, 0),
+                       jnp.where(ok, rank, 0)].set(
+            jnp.where(ok[:, None], jnp.take(toks, tok_idx, axis=0), 0),
+            mode="drop")
+        send_eid = jnp.full((p_ep, cap), -1, jnp.int32)
+        send_eid = send_eid.at[jnp.where(ok, sdest, 0),
+                               jnp.where(ok, rank, 0)].set(
+            jnp.where(ok, jnp.take(eid.reshape(-1), order), -1),
+            mode="drop")
+
+        recv = jax.lax.all_to_all(send, ep_axes, 0, 0, tiled=True)
+        recv_eid = jax.lax.all_to_all(send_eid, ep_axes, 0, 0, tiled=True)
+        # recv [p_ep*cap, d] tokens destined to this shard's local experts
+        rt = recv.reshape(p_ep * cap, d)
+        re = recv_eid.reshape(p_ep * cap)
+        my = jnp.int32(0)
+        mul = 1
+        for a in reversed(ep_axes):
+            my = my + jax.lax.axis_index(a) * mul
+            mul *= mesh.shape[a]
+        local_e = re - my * e_loc                              # [-, E_loc)
+
+        out = jnp.zeros_like(rt)
+        for le in range(e_loc):
+            sel = (local_e == le)[:, None]
+            h = jnp.where(sel, rt, 0) @ w_in[le].astype(rt.dtype)
+            h = swiglu(h)
+            out = out + jnp.where(sel, h @ w_out[le].astype(h.dtype), 0)
+
+        back = jax.lax.all_to_all(out.reshape(p_ep, cap, d), ep_axes, 0, 0,
+                                  tiled=True)
+        # combine: gather each (token, k) slot's output, weight, reduce
+        flat = back.reshape(p_ep * cap, d)
+        slot_of = jnp.full(n * mo.top_k, p_ep * cap - 1, jnp.int32)
+        slot_of = slot_of.at[order].set(
+            jnp.where(ok, sdest * cap + rank, p_ep * cap - 1))
+        gathered = jnp.take(flat, slot_of, axis=0)             # [n*K, d]
+        ok_slot = jnp.zeros(n * mo.top_k, bool).at[order].set(ok)
+        w = (gate.reshape(-1) * ok_slot).astype(gathered.dtype)
+        y = (gathered * w[:, None]).reshape(n, mo.top_k, d).sum(axis=1)
+        return y.reshape(bl, sl, d)
+
+    wspec = P(*[e if isinstance(e, tuple) else (e,) for e in [ep_axes]][0]) \
+        if False else P(ep_axes)
+    moe_fn = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(batch_axes, seq_ax, None), P(), P(ep_axes), P(ep_axes)),
+        out_specs=P(batch_axes, seq_ax, None),
+        check_rep=False)
+    y = moe_fn(xn, p["router"], p["w_in"], p["w_out"])
+
+    if mo.num_shared:
+        hs = swiglu(xn.reshape(b * s, d) @ p["shared_in"].astype(xn.dtype))
+        y = y + (hs @ p["shared_out"].astype(hs.dtype)).reshape(b, s, d)
+    return x + y
+
+
+def apply_moe_gather(cfg: ModelConfig, p, x):
+    """Capacity-based top-k MoE, einsum dispatch (GSPMD shards experts).
+
+    Dispatch = the paper's shuffle: tokens are partitioned by K2 = expert id
+    and combined with a segment reduction; on the production mesh the expert
+    dimension is sharded over ``moe.ep_axes`` and GSPMD lowers the dispatch
+    einsums into the corresponding all_to_all/reduce-scatter schedule.
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    tokens = xn.reshape(b * s, d)
+    n = tokens.shape[0]
+
+    logits = (tokens.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))             # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, mo.top_k)                # [N, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, (n * mo.top_k * mo.capacity_factor) // mo.num_experts))
+    # small-batch floor: decode / smoke batches must never drop (keeps
+    # decode == teacher-forced parity exact); production sizes unaffected
+    cap = max(cap, min(n, 32))
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(eid, mo.num_experts, dtype=jnp.int32)  # [N,K,E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(n * mo.top_k, mo.num_experts),
+                           axis=0) - 1).reshape(n, mo.top_k, mo.num_experts)
+    pos_k = jnp.take_along_axis(pos_in_e, eid[..., None],
+                                axis=2)[..., 0]               # [N, K]
+    keep = pos_k < cap
+    # dispatch: scatter tokens into [E, cap, d]
+    flat_e = jnp.where(keep, eid, mo.num_experts).reshape(-1)
+    flat_pos = jnp.where(keep, pos_k, 0).reshape(-1)
+    disp = jnp.zeros((mo.num_experts + 1, cap, d), tokens.dtype)
+    tok_rep = jnp.repeat(tokens, mo.top_k, axis=0)
+    disp = disp.at[flat_e, flat_pos].set(tok_rep)
+    disp = disp[:mo.num_experts]
+    disp = constrain(disp, cfg.sharding, ("expert", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", disp, p["w_in"].astype(disp.dtype))
+    h = swiglu(h)
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(h.dtype))
+    eout = constrain(eout, cfg.sharding, ("expert", None, None))
+
+    # combine: gather back and weight by gate (segment-sum over k slots)
+    gath = eout[flat_e % mo.num_experts,
+                flat_pos]                                     # [N*K, d]
+    gath = gath * (gate.reshape(-1, 1) * keep.reshape(-1, 1)).astype(gath.dtype)
+    y = gath.reshape(n, mo.top_k, d).sum(axis=1)
+
+    if mo.num_shared:
+        hs = swiglu(tokens @ p["shared_in"].astype(tokens.dtype))
+        y = y + hs @ p["shared_out"].astype(hs.dtype)
+    return x + y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def plan_rglru(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    r = cfg.rglru.d_rnn
+    cw = cfg.rglru.conv_width
+    return {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "w_x": ParamSpec((d, r), ("d_model", "d_ff")),
+        "w_gate": ParamSpec((d, r), ("d_model", "d_ff")),
+        "conv_w": ParamSpec((cw, r), (None, "d_ff")),
+        "conv_b": ParamSpec((r,), ("d_ff",), "zeros"),
+        "w_a": ParamSpec((r, r), ("d_ff", None)),
+        "w_i": ParamSpec((r, r), ("d_ff", None)),
+        "lam": ParamSpec((r,), (None,), "ones"),
+        "w_out": ParamSpec((r, d), ("d_ff", "d_model")),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u [B,S,R], w [CW,R] depthwise causal conv; state [B,CW-1,R]."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (cw - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    new_state = full[:, -(cw - 1):] if cw > 1 else None
+    return out + b, new_state
+
+
+def apply_rglru(cfg: ModelConfig, p, x, cache=None):
+    c = 8.0
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    u = xn @ p["w_x"].astype(xn.dtype)
+    g = jax.nn.gelu(xn @ p["w_gate"].astype(xn.dtype), approximate=True)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"].astype(u.dtype),
+                               p["conv_b"].astype(u.dtype), conv_state)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    bterm = beta * (i * uf)
+
+    if cache is None:
+        # h_t = a_t h_{t-1} + b_t  via associative scan over time
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, bl * ar + br
+        av, bv = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        h = bv
+        new_cache = None
+    else:
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + bterm[:, 0]
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": new_conv}
+        h = h[:, None]
+    y = (h.astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
+    return x + y, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    r = cfg.rglru.d_rnn
+    cw = cfg.rglru.conv_width
+    return {
+        "h": ParamSpec((batch, r), ("batch", None), "zeros"),
+        "conv": ParamSpec((batch, cw - 1, r), ("batch", None, None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+def plan_mlstm(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h = cfg.d_model, cfg.n_heads
+    m = 2 * d                       # projection factor 2
+    dh = m // h
+    return {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "w_up": ParamSpec((d, 2 * m), ("d_model", "d_ff")),
+        "wq": ParamSpec((m, m), ("d_ff", None)),
+        "wk": ParamSpec((m, m), ("d_ff", None)),
+        "wv": ParamSpec((m, m), ("d_ff", None)),
+        "w_if": ParamSpec((m, 2 * h), ("d_ff", None)),
+        "gn": ParamSpec((m,), (None,), "zeros"),
+        "w_down": ParamSpec((m, d), ("d_ff", "d_model")),
+    }
+
+
+def _mlstm_step(carry, inp):
+    (C, n, mstab) = carry
+    (q, k, v, i_t, f_t) = inp       # q/k/v [B,H,dh]; i/f [B,H]
+    mnew = jnp.maximum(f_t + mstab, i_t)
+    fp = jnp.exp(f_t + mstab - mnew)[..., None]
+    ip = jnp.exp(i_t - mnew)[..., None]
+    C = fp[..., None] * C + ip[..., None] * (v[..., :, None] *
+                                             k[..., None, :])
+    n = fp * n + ip * k
+    denom = jnp.maximum(jnp.abs((n * q).sum(-1)), 1.0)[..., None]
+    h = (C * q[..., None, :]).sum(-1) / denom
+    return (C, n, mnew), h
+
+
+def apply_mlstm(cfg: ModelConfig, p, x, cache=None):
+    b, s, d = x.shape
+    h_ = cfg.n_heads
+    m = 2 * d
+    dh = m // h_
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"].astype(xn.dtype)
+    z, gate = jnp.split(up, 2, axis=-1)
+    q = (z @ p["wq"].astype(z.dtype)).reshape(b, s, h_, dh)
+    k = (z @ p["wk"].astype(z.dtype)).reshape(b, s, h_, dh) / (dh ** 0.5)
+    v = (z @ p["wv"].astype(z.dtype)).reshape(b, s, h_, dh)
+    gf = (z.astype(jnp.float32) @ p["w_if"].astype(jnp.float32))
+    i_t = gf[..., :h_]
+    f_t = jax.nn.log_sigmoid(gf[..., h_:])
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if cache is None:
+        carry = (jnp.zeros((b, h_, dh, dh)), jnp.zeros((b, h_, dh)),
+                 jnp.zeros((b, h_)))
+        xs = (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+              i_t.swapaxes(0, 1), f_t.swapaxes(0, 1))
+        _, hs = jax.lax.scan(_mlstm_step, carry, xs)
+        hs = hs.swapaxes(0, 1)                      # [B,S,H,dh]
+        new_cache = None
+    else:
+        carry = (cache["C"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        carry, h1 = _mlstm_step(carry, (qf[:, 0], kf[:, 0], vf[:, 0],
+                                        i_t[:, 0], f_t[:, 0]))
+        hs = h1[:, None]
+        new_cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    hs = hs.reshape(b, -1, m).astype(x.dtype)
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps)
+    y = (hs * jax.nn.silu(gate)) @ p["w_down"].astype(x.dtype)
+    return x + y, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    h_ = cfg.n_heads
+    dh = 2 * cfg.d_model // h_
+    return {
+        "C": ParamSpec((batch, h_, dh, dh), ("batch", None, None, None),
+                       "zeros"),
+        "n": ParamSpec((batch, h_, dh), ("batch", None, None), "zeros"),
+        "m": ParamSpec((batch, h_), ("batch", None), "zeros"),
+    }
+
+
+def plan_slstm(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ff = max(int(4 * d / 3) // 2 * 2, 8)
+    return {
+        "norm": ParamSpec((d,), ("d_model",), "zeros"),
+        "w_gates": ParamSpec((d, 4 * d), ("d_model", None)),
+        "r_gates": ParamSpec((4, h, dh, dh), (None, None, None, None)),
+        "gn": ParamSpec((d,), (None,), "zeros"),
+        "norm2": ParamSpec((d,), ("d_model",), "zeros"),
+        "up": ParamSpec((d, 2 * ff), ("d_model", "d_ff")),
+        "down": ParamSpec((ff, d), ("d_ff", "d_model")),
+    }
+
+
+def _slstm_step(params, carry, wx_t):
+    """carry: (c, n, h, m) each [B, H, dh]; wx_t [B, 4, H, dh]."""
+    r = params
+    c, n, h, mstab = carry
+    rec = jnp.einsum("ghij,bhj->bghi", r, h)
+    pre = wx_t + rec                             # [B,4,H,dh]
+    z = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    mnew = jnp.maximum(f_t + mstab, i_t)
+    ip = jnp.exp(i_t - mnew)
+    fp = jnp.exp(f_t + mstab - mnew)
+    c = fp * c + ip * z
+    n = jnp.maximum(fp * n + ip, 1e-6)
+    h = o * c / n
+    return (c, n, h, mnew), h
+
+
+def apply_slstm(cfg: ModelConfig, p, x, cache=None):
+    b, s, d = x.shape
+    h_ = cfg.n_heads
+    dh = d // h_
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = (xn.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32))
+    wx = wx.reshape(b, s, 4, h_, dh)
+    r = p["r_gates"].astype(jnp.float32)
+    step = functools.partial(_slstm_step, r)
+    if cache is None:
+        zero = jnp.zeros((b, h_, dh))
+        carry = (zero, zero, zero, jnp.zeros((b, h_, dh)))
+        _, hs = jax.lax.scan(lambda c_, w: step(c_, w), carry,
+                             wx.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)
+        new_cache = None
+    else:
+        carry = tuple(cache[k].astype(jnp.float32)
+                      for k in ("c", "n", "h", "m"))
+        carry, h1 = step(carry, wx[:, 0])
+        hs = h1[:, None]
+        new_cache = dict(zip(("c", "n", "h", "m"), carry))
+    hs = hs.reshape(b, -1, d).astype(x.dtype)
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps)
+    y = x + hs
+    # post-FFN (GLU, projection factor 4/3)
+    hff = swiglu(rms_norm(y, p["norm2"], cfg.norm_eps)
+                 @ p["up"].astype(y.dtype))
+    return y + hff @ p["down"].astype(y.dtype), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    h_ = cfg.n_heads
+    dh = cfg.d_model // h_
+    sp = ParamSpec((batch, h_, dh), ("batch", None, None), "zeros")
+    return {"c": sp, "n": sp, "h": sp, "m": sp}

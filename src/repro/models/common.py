@@ -1,0 +1,173 @@
+"""Shared model machinery: parameter plans, logical-axis sharding, norms,
+rotary embeddings, activation helpers.
+
+Parameters are declared as ``ParamSpec`` trees (shape + logical axes), from
+which we derive (a) real initialized arrays for smoke training, (b)
+``ShapeDtypeStruct`` stand-ins with ``NamedSharding`` for the dry-run, and
+(c) the in_shardings pytree for pjit — one source of truth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShardingRules
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]    # logical axis per dim
+    init: str = "normal"               # normal | zeros | ones | lecun
+
+
+def _mesh_axes(rules: ShardingRules, logical: Optional[str]):
+    if logical is None:
+        return None
+    table = {
+        "batch": rules.batch, "seq": rules.seq,
+        "heads": rules.heads, "kv_heads": rules.kv_heads,
+        "d_model": rules.d_model, "d_ff": rules.d_ff,
+        "vocab": rules.vocab, "expert": rules.expert,
+        "kv_seq": rules.kv_seq,
+    }
+    return table.get(logical, None)
+
+
+def pspec(rules: ShardingRules, axes: Tuple[Optional[str], ...]) -> P:
+    return P(*[_mesh_axes(rules, a) for a in axes])
+
+
+def _divisible_entry(entry, dim: int, mesh: Mesh):
+    """Drop mesh axes from a pspec entry until they evenly divide ``dim``.
+
+    Explicit input shardings must tile evenly (GSPMD may pad intermediates,
+    but inputs may not) — e.g. kv_heads=8 cannot take an explicit 16-way
+    shard; it falls back to replicated and GSPMD re-shards downstream.
+    """
+    if entry is None:
+        return None
+    names = list(entry) if isinstance(entry, (tuple, list)) else [entry]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    while names:
+        prod = 1
+        for n in names:
+            prod *= sizes.get(n, 1)
+        if prod > 0 and dim % prod == 0:
+            break
+        names.pop()
+    if not names:
+        return None
+    return tuple(names) if len(names) > 1 else names[0]
+
+
+def valid_pspec(rules: ShardingRules, axes: Tuple[Optional[str], ...],
+                shape: Tuple[int, ...], mesh: Mesh) -> P:
+    entries = [_mesh_axes(rules, a) for a in axes]
+    return P(*[_divisible_entry(e, d, mesh)
+               for e, d in zip(entries, shape)])
+
+
+def tree_shardings(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, valid_pspec(rules, s.axes, s.shape,
+                                                  mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shape_structs(spec_tree, rules: ShardingRules, mesh: Optional[Mesh],
+                       dtype):
+    def mk(s: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return jax.ShapeDtypeStruct(
+            s.shape, dtype,
+            sharding=NamedSharding(mesh, valid_pspec(rules, s.axes, s.shape,
+                                                     mesh)))
+    return jax.tree.map(mk, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_init(spec_tree, key, dtype):
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[0], 1)
+            if s.init == "lecun" and len(s.shape) >= 2:
+                fan_in = int(np.prod(s.shape[:-1]))
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def constrain(x, rules: ShardingRules, axes: Tuple[Optional[str], ...]):
+    """with_sharding_constraint via logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, pspec(rules, axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope_table(positions, dim: int, theta: float):
+    """positions [*, T] -> (sin, cos) each [*, T, dim/2] in fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., T, H, D]; sin/cos [..., T, D/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)
+
+
+def swiglu(x, kind: str = "swiglu"):
+    """x [..., 2*ff] fused gate+up -> [..., ff]."""
+    gate, up = jnp.split(x, 2, axis=-1)
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.silu(gate) * up
+
+
+def cross_entropy(logits, targets, mask, logit_cap: float = 0.0):
+    """Token-mean CE in fp32. logits [..., V], targets int [...]."""
+    logits = softcap(logits.astype(jnp.float32), logit_cap)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

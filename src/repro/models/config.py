@@ -1,0 +1,177 @@
+"""Model / mesh / sharding configuration for the LM stack.
+
+A ``ModelConfig`` fully describes one of the assigned architectures; the
+layer stack is a cycled ``block_pattern`` (scanned as stacked super-blocks to
+keep the HLO compact), with optional unrolled prefix layers (e.g.
+DeepSeek-V3's first-3-dense).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0            # shared (always-on) experts
+    d_ff_shared: int = 0
+    # mesh axes the expert dimension is sharded over ("model",) or
+    # ("data", "model") -- the latter gives 256-way EP for DeepSeek-V3
+    ep_axes: Tuple[str, ...] = ("model",)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 Multi-head Latent Attention."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU recurrent block."""
+    d_rnn: int = 2560
+    conv_width: int = 4
+    block_width: int = 2560        # lru gate width
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical tensor axes -> mesh axis names (None = replicated).
+
+    The hillclimb lever: every rule change re-lowers into a different
+    collective schedule.
+    """
+    batch: Tuple[str, ...] = ("pod", "data")
+    seq: Optional[str] = None               # sequence parallelism if set
+    heads: Optional[str] = "model"          # attention heads (q)
+    kv_heads: Optional[str] = "model"
+    d_model: Optional[str] = None           # residual stream
+    d_ff: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    expert: Tuple[str, ...] = ("model",)
+    kv_seq: Optional[str] = None            # decode KV-cache sequence dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | xlstm | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    d_ff_dense: int = 0            # dense-FFN width for mixed MoE stacks
+    block_pattern: Tuple[str, ...] = ("attn_dense",)
+    prefix_blocks: Tuple[str, ...] = ()     # unrolled layers before the scan
+    causal: bool = True                     # False for encoder-only (hubert)
+    tie_embeddings: bool = False
+    # attention options
+    qk_norm: bool = False                   # qwen3 / chameleon
+    ffn_kind: str = "swiglu"                # swiglu | geglu | gelu
+    attn_softcap: float = 0.0               # gemma2
+    logit_softcap: float = 0.0              # gemma2
+    local_window: int = 4096                # for "attn_local" blocks
+    rope_theta: float = 10000.0
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    mtp: bool = False                       # DeepSeek multi-token prediction
+    # frontend stub: inputs are precomputed embeddings [B, T, d_model]
+    embed_inputs: bool = True               # False => frontend-embedded input
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"
+    remat: str = "full"                     # full | dots | none
+    scan_layers: bool = True                # False => unrolled (cost probes)
+    moe_impl: str = "gather"                # gather | a2a (shard_map shuffle)
+    attn_impl: str = "dense"                # dense | blockwise (flash-style)
+    attn_block: int = 1024                  # kv block for blockwise attention
+    loss_chunk: int = 0                     # 0 = unchunked cross-entropy
+    norm_eps: float = 1e-6
+    post_norms: bool = False                # gemma2 pre+post norms
+    sharding: ShardingRules = field(default_factory=ShardingRules)
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def n_rep(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def cycles(self) -> int:
+        body = self.n_layers - len(self.prefix_blocks)
+        return body // len(self.block_pattern)
+
+    @property
+    def remainder_blocks(self) -> Tuple[str, ...]:
+        body = self.n_layers - len(self.prefix_blocks)
+        rem = body % len(self.block_pattern)
+        return tuple(self.block_pattern[:rem])
+
+    def dtype(self, which: str):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "float16": jnp.float16}[getattr(self, which + "_dtype")]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=max(len(cfg.block_pattern) + len(cfg.prefix_blocks), 2),
+        d_model=64, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) or 1,
+        d_ff=128, vocab=256, head_dim=16, local_window=32,
+        d_ff_dense=128 if cfg.d_ff_dense else 0,
+        remat="none",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64, d_ff_shared=64 if cfg.moe.num_shared else 0,
+            ep_axes=("model",))
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)
+    if cfg.rglru is not None:
+        kw["rglru"] = RGLRUConfig(d_rnn=64, conv_width=4, block_width=64)
+    return cfg.replace(**kw)

@@ -1,0 +1,366 @@
+"""LM assembly: embedding, cycled super-block stack (lax.scan), loss, decode.
+
+The layer stack is three segments — unrolled ``prefix`` blocks, a scanned
+body of ``cycles`` super-blocks (stacked params, compact HLO — mandatory for
+512-way SPMD compiles on the CPU host), and unrolled ``remainder`` blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.common import (
+    ParamSpec, constrain, cross_entropy, rms_norm, softcap, tree_init,
+    tree_shape_structs, tree_shardings,
+)
+from repro.models.config import ModelConfig, ShapeCell
+
+
+# ---------------------------------------------------------------------------
+# Parameter plan
+# ---------------------------------------------------------------------------
+
+def plan_block(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind == "attn_dense":
+        return {"attn": B.plan_attention(cfg),
+                "ffn": B.plan_ffn(cfg, kind=cfg.ffn_kind)}
+    if kind == "attn_local":
+        return {"attn": B.plan_attention(cfg),
+                "ffn": B.plan_ffn(cfg, kind=cfg.ffn_kind)}
+    if kind == "mla_dense":
+        return {"attn": B.plan_mla(cfg),
+                "ffn": B.plan_ffn(cfg, d_ff=cfg.d_ff_dense,
+                                  kind=cfg.ffn_kind)}
+    if kind == "attn_moe":
+        attn = B.plan_mla(cfg) if cfg.mla is not None else \
+            B.plan_attention(cfg)
+        return {"attn": attn, "moe": B.plan_moe(cfg)}
+    if kind == "rec":
+        return {"rec": B.plan_rglru(cfg),
+                "ffn": B.plan_ffn(cfg, kind=cfg.ffn_kind)}
+    if kind == "mlstm":
+        return {"cell": B.plan_mlstm(cfg)}
+    if kind == "slstm":
+        return {"cell": B.plan_slstm(cfg)}
+    raise ValueError(kind)
+
+
+def plan_model(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    plan: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        plan["embed"] = ParamSpec((cfg.vocab, d), ("vocab", "d_model"))
+    plan["final_norm"] = ParamSpec((d,), ("d_model",), "zeros")
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        plan["head"] = ParamSpec((d, cfg.vocab), ("d_model", "vocab"))
+    plan["prefix"] = [plan_block(cfg, k) for k in cfg.prefix_blocks]
+    if cfg.cycles > 0:
+        super_plan = {f"b{i}_{k}": plan_block(cfg, k)
+                      for i, k in enumerate(cfg.block_pattern)}
+        plan["body"] = jax.tree.map(
+            lambda s: ParamSpec((cfg.cycles,) + s.shape, (None,) + s.axes,
+                                s.init),
+            super_plan, is_leaf=lambda x: isinstance(x, ParamSpec))
+    plan["rem"] = [plan_block(cfg, k) for k in cfg.remainder_blocks]
+    if cfg.mtp:
+        plan["mtp_proj"] = ParamSpec((2 * d, d), ("d_model", None))
+        plan["mtp_block"] = plan_block(cfg, "attn_dense")
+        plan["mtp_norm"] = ParamSpec((d,), ("d_model",), "zeros")
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Caches (decode)
+# ---------------------------------------------------------------------------
+
+def plan_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn_dense",):
+        return {"attn": B.init_attn_cache(cfg, batch, max_len)}
+    if kind == "attn_local":
+        return {"attn": B.init_attn_cache(cfg, batch, max_len,
+                                          window=cfg.local_window)}
+    if kind in ("mla_dense",):
+        return {"attn": B.init_mla_cache(cfg, batch, max_len)}
+    if kind == "attn_moe":
+        c = B.init_mla_cache(cfg, batch, max_len) if cfg.mla is not None \
+            else B.init_attn_cache(cfg, batch, max_len)
+        return {"attn": c}
+    if kind == "rec":
+        return {"rec": B.init_rglru_cache(cfg, batch)}
+    if kind == "mlstm":
+        return {"cell": B.init_mlstm_cache(cfg, batch)}
+    if kind == "slstm":
+        return {"cell": B.init_slstm_cache(cfg, batch)}
+    raise ValueError(kind)
+
+
+def plan_caches(cfg: ModelConfig, batch: int, max_len: int):
+    plan: Dict[str, Any] = {"pos": ParamSpec((), (), "zeros")}
+    plan["prefix"] = [plan_block_cache(cfg, k, batch, max_len)
+                      for k in cfg.prefix_blocks]
+    if cfg.cycles > 0:
+        sup = {f"b{i}_{k}": plan_block_cache(cfg, k, batch, max_len)
+               for i, k in enumerate(cfg.block_pattern)}
+        plan["body"] = jax.tree.map(
+            lambda s: ParamSpec((cfg.cycles,) + s.shape, (None,) + s.axes,
+                                s.init),
+            sup, is_leaf=lambda x: isinstance(x, ParamSpec))
+    plan["rem"] = [plan_block_cache(cfg, k, batch, max_len)
+                   for k in cfg.remainder_blocks]
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg: ModelConfig, kind: str, p, x, pos, cache):
+    if kind in ("attn_dense", "attn_local"):
+        win = cfg.local_window if kind == "attn_local" else 0
+        x, c = B.apply_attention(cfg, p["attn"], x, pos,
+                                 cache["attn"] if cache else None, window=win)
+        x = B.apply_ffn(cfg, p["ffn"], x, kind=cfg.ffn_kind)
+        return x, ({"attn": c} if cache else None)
+    if kind == "mla_dense":
+        x, c = B.apply_mla(cfg, p["attn"], x, pos,
+                           cache["attn"] if cache else None)
+        x = B.apply_ffn(cfg, p["ffn"], x, kind=cfg.ffn_kind)
+        return x, ({"attn": c} if cache else None)
+    if kind == "attn_moe":
+        if cfg.mla is not None:
+            x, c = B.apply_mla(cfg, p["attn"], x, pos,
+                               cache["attn"] if cache else None)
+        else:
+            x, c = B.apply_attention(cfg, p["attn"], x, pos,
+                                     cache["attn"] if cache else None)
+        x = B.apply_moe(cfg, p["moe"], x)
+        return x, ({"attn": c} if cache else None)
+    if kind == "rec":
+        x, c = B.apply_rglru(cfg, p["rec"], x,
+                             cache["rec"] if cache else None)
+        x = B.apply_ffn(cfg, p["ffn"], x, kind=cfg.ffn_kind)
+        return x, ({"rec": c} if cache else None)
+    if kind == "mlstm":
+        x, c = B.apply_mlstm(cfg, p["cell"], x,
+                             cache["cell"] if cache else None)
+        return x, ({"cell": c} if cache else None)
+    if kind == "slstm":
+        x, c = B.apply_slstm(cfg, p["cell"], x,
+                             cache["cell"] if cache else None)
+        return x, ({"cell": c} if cache else None)
+    raise ValueError(kind)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg: ModelConfig, params, inputs, pos, caches=None):
+    """inputs: token ids [B,S] (embed_inputs) or embeddings [B,S,d].
+
+    Returns (hidden [B,S,d], new_caches).
+    """
+    rules = cfg.sharding
+    if cfg.embed_inputs:
+        emb = params["embed"]
+        x = jnp.take(emb, inputs, axis=0).astype(cfg.dtype("compute"))
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    else:
+        x = inputs.astype(cfg.dtype("compute"))
+    x = constrain(x, rules, ("batch", "seq", "d_model"))
+
+    new_caches = {"pos": caches["pos"] + 1} if caches is not None else None
+
+    def seg_list(name, kinds, plist, clist):
+        nonlocal x
+        out_caches = []
+        for i, kind in enumerate(kinds):
+            c = clist[i] if clist is not None else None
+            x2, nc = apply_block(cfg, kind, plist[i], x, pos, c)
+            x = constrain(x2, rules, ("batch", "seq", "d_model"))
+            out_caches.append(nc)
+        return out_caches
+
+    pc = caches["prefix"] if caches is not None else None
+    new_prefix = seg_list("prefix", cfg.prefix_blocks, params.get(
+        "prefix", []), pc)
+
+    if cfg.cycles > 0:
+        pattern = cfg.block_pattern
+
+        def body(xc, layer):
+            lp, lc = layer
+            xx = xc
+            ncs = {}
+            for i, kind in enumerate(pattern):
+                key = f"b{i}_{kind}"
+                c = lc[key] if lc is not None else None
+                xx, nc = apply_block(cfg, kind, lp[key], xx, pos, c)
+                xx = constrain(xx, rules, ("batch", "seq", "d_model"))
+                ncs[key] = nc
+            return xx, ncs
+
+        body_r = _remat(cfg, body)
+        if caches is not None:
+            if cfg.scan_layers:
+                x, body_caches = jax.lax.scan(
+                    body_r, x, (params["body"], caches["body"]))
+            else:
+                ncs = []
+                for i in range(cfg.cycles):
+                    lp = jax.tree.map(lambda a: a[i], params["body"])
+                    lc = jax.tree.map(lambda a: a[i], caches["body"])
+                    x, nc = body_r(x, (lp, lc))
+                    ncs.append(nc)
+                body_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            new_caches["body"] = body_caches
+        else:
+            if cfg.scan_layers:
+                def body_noc(xc, lp):
+                    xx, _ = body_r(xc, (lp, None))
+                    return xx, None
+                x, _ = jax.lax.scan(body_noc, x, params["body"])
+            else:
+                for i in range(cfg.cycles):
+                    lp = jax.tree.map(lambda a: a[i], params["body"])
+                    x, _ = body_r(x, (lp, None))
+
+    rc = caches["rem"] if caches is not None else None
+    new_rem = seg_list("rem", cfg.remainder_blocks, params.get("rem", []), rc)
+
+    if caches is not None:
+        new_caches["prefix"] = new_prefix
+        new_caches["rem"] = new_rem
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches
+
+
+def logits_fn(cfg: ModelConfig, params, hidden):
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        w = params["embed"].astype(hidden.dtype).T
+    else:
+        w = params["head"].astype(hidden.dtype)
+    return hidden @ w
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step / serve step
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, batch):
+    inputs = batch["inputs"]
+    pos = batch.get("pos")
+    if pos is None:
+        s = inputs.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                               inputs.shape[:2])
+    hidden, _ = forward(cfg, params, inputs, pos)
+    targets, mask = batch["targets"], batch["mask"]
+
+    if cfg.loss_chunk and hidden.shape[1] % cfg.loss_chunk == 0 \
+            and hidden.shape[1] > cfg.loss_chunk:
+        # blockwise CE: never materialize the full [B,S,V] logits
+        nch = hidden.shape[1] // cfg.loss_chunk
+        hs = hidden.reshape(hidden.shape[0], nch, cfg.loss_chunk, -1)
+        ts = targets.reshape(targets.shape[0], nch, cfg.loss_chunk)
+        ms = mask.reshape(mask.shape[0], nch, cfg.loss_chunk)
+
+        def chunk(carry, xs):
+            h, t, m = xs
+            lg = logits_fn(cfg, params, h)
+            lg = softcap(lg.astype(jnp.float32), cfg.logit_softcap)
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+            nll = ((logz - gold) * m).sum()
+            return (carry[0] + nll, carry[1] + m.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk, (jnp.float32(0), jnp.float32(0)),
+            (hs.swapaxes(0, 1), ts.swapaxes(0, 1), ms.swapaxes(0, 1)))
+        loss = tot / jnp.maximum(cnt, 1.0)
+    else:
+        logits = logits_fn(cfg, params, hidden)
+        loss = cross_entropy(logits, targets, mask.astype(jnp.float32),
+                             cfg.logit_softcap)
+
+    if cfg.mtp and cfg.embed_inputs:
+        # DeepSeek-V3-style multi-token prediction: one extra block predicts
+        # token t+2 from [h_t ; emb(tok_{t+1})]
+        emb = params["embed"]
+        nxt = jnp.take(emb, batch["targets"], axis=0).astype(hidden.dtype)
+        h2 = jnp.concatenate([hidden, nxt], axis=-1) @ \
+            params["mtp_proj"].astype(hidden.dtype)
+        pos2 = jnp.broadcast_to(
+            jnp.arange(h2.shape[1], dtype=jnp.int32)[None], h2.shape[:2])
+        h2, _ = apply_block(cfg, "attn_dense", params["mtp_block"], h2,
+                            pos2, None)
+        h2 = rms_norm(h2, params["mtp_norm"], cfg.norm_eps)
+        lg2 = logits_fn(cfg, params, h2)
+        t2 = jnp.concatenate([batch["targets"][:, 1:],
+                              batch["targets"][:, -1:]], axis=1)
+        m2 = mask.astype(jnp.float32) * \
+            jnp.concatenate([jnp.ones_like(mask[:, 1:]),
+                             jnp.zeros_like(mask[:, :1])],
+                            axis=1).astype(jnp.float32)
+        loss = loss + 0.3 * cross_entropy(lg2, t2, m2, cfg.logit_softcap)
+    return loss
+
+
+def serve_step(cfg: ModelConfig, params, caches, tokens):
+    """One decode step: tokens [B, 1] -> logits [B, vocab], new caches."""
+    cpos = caches["pos"]
+    pos = jnp.broadcast_to(cpos[None, None], tokens.shape[:2]).astype(
+        jnp.int32)
+    hidden, new_caches = forward(cfg, params, tokens, pos, caches)
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Materialization helpers
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    return tree_init(plan_model(cfg), key, cfg.dtype("param"))
+
+
+def param_specs(cfg: ModelConfig, mesh=None):
+    return tree_shape_structs(plan_model(cfg), cfg.sharding, mesh,
+                              cfg.dtype("param"))
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    return tree_shardings(plan_model(cfg), cfg.sharding, mesh)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, key=None):
+    plan = plan_caches(cfg, batch, max_len)
+    caches = tree_init(plan, jax.random.PRNGKey(0) if key is None else key,
+                       cfg.dtype("compute"))
+    # pos is an int32 scalar
+    caches["pos"] = jnp.int32(0)
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh=None):
+    plan = plan_caches(cfg, batch, max_len)
+    specs = tree_shape_structs(plan, cfg.sharding, mesh,
+                               cfg.dtype("compute"))
+    def fix_pos(tree):
+        tree["pos"] = jax.ShapeDtypeStruct((), jnp.int32) if mesh is None \
+            else jax.ShapeDtypeStruct(
+                (), jnp.int32,
+                sharding=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+        return tree
+    return fix_pos(specs)

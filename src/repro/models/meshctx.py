@@ -1,0 +1,22 @@
+"""Ambient mesh for shard_map regions inside GSPMD-jitted models.
+
+``launch.steps.input_specs`` / the drivers set this before lowering; the MoE
+all_to_all implementation reads it.  (ModelConfig is a frozen, hashable
+dataclass and cannot carry the mesh object itself.)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH

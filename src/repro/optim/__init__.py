@@ -1,0 +1,3 @@
+from repro.optim.adamw import (  # noqa
+    AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm,
+)

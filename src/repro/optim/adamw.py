@@ -1,0 +1,79 @@
+"""AdamW with gradient clipping and schedules, pytree-native.
+
+Optimizer moments inherit the parameter shardings (and can additionally be
+ZeRO-sharded over the data axis via ``repro.launch.dryrun`` sharding
+overrides, since they are plain pytrees).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10000
+    opt_dtype: Any = jnp.float32
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    return cfg.lr * warm * (0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.opt_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t: t[2], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}, {"grad_norm": gnorm,
+                                                        "lr": lr}

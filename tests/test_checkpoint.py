@@ -1,0 +1,55 @@
+"""Checkpoint substrate: atomic save/restore, keep-k GC, elastic reshard."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager, latest_step, restore_pytree, \
+    save_pytree
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32),
+            "b": [jnp.asarray(rng.integers(0, 5, 3), jnp.int32),
+                  {"c": jnp.asarray(rng.normal(0, 1, 7), jnp.bfloat16)}]}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(tmp_path, 3, t, {"loss": 1.5})
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    got, meta = restore_pytree(tmp_path, 3, like)
+    assert meta["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path):
+    for s in range(6):
+        save_pytree(tmp_path, s, _tree(s), keep=2)
+    import pathlib
+    steps = sorted(pathlib.Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2
+    assert latest_step(tmp_path) == 5
+
+
+def test_manager_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=2)
+    t = _tree()
+    assert not mgr.maybe_save(1, t)
+    assert mgr.maybe_save(2, t)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    s, tree, meta = mgr.resume(like)
+    assert s == 2
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore under a different dtype/sharding target (elastic)."""
+    t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_pytree(tmp_path, 1, t)
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    got, _ = restore_pytree(tmp_path, 1, like)
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got["w"], np.float32),
+                               np.arange(16).reshape(4, 4))

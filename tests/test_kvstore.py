@@ -1,0 +1,99 @@
+"""Unit + hypothesis property tests for the kv substrate."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvstore import (
+    Edges, compact_edges, make_edges, next_bucket, segment_reduce,
+    sort_edges, sum_reducer, min_reducer, max_reducer, mean_reducer,
+)
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_segment_sum_matches_numpy(keys, seed):
+    keys = np.asarray(keys, np.int32)
+    rng = np.random.default_rng(seed % 2**31)
+    vals = rng.normal(0, 1, keys.shape[0]).astype(np.float32)
+    valid = rng.random(keys.shape[0]) < 0.8
+    acc, counts = segment_reduce(sum_reducer(), jnp.asarray(keys),
+                                 {"v": jnp.asarray(vals)},
+                                 jnp.asarray(valid), 31)
+    want = np.zeros(31)
+    wc = np.zeros(31, np.int64)
+    for k, v, ok in zip(keys, vals, valid):
+        if ok:
+            want[k] += v
+            wc[k] += 1
+    np.testing.assert_allclose(np.asarray(acc["v"]), want, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(counts), wc)
+
+
+@pytest.mark.parametrize("reducer,npop", [
+    (min_reducer(), np.minimum), (max_reducer(), np.maximum)])
+def test_min_max_reduce(reducer, npop):
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 10, 100).astype(np.int32)
+    vals = rng.normal(0, 1, 100).astype(np.float32)
+    acc, counts = segment_reduce(reducer, jnp.asarray(keys),
+                                 {"v": jnp.asarray(vals)},
+                                 jnp.ones(100, bool), 10)
+    got = np.asarray(acc["v"])
+    for k in range(10):
+        sel = vals[keys == k]
+        if sel.size:
+            expected = sel.min() if reducer.kind == "min" else sel.max()
+            assert abs(got[k] - expected) < 1e-6
+
+
+def test_sort_edges_orders_by_k2_mk_and_masks_invalid():
+    rng = np.random.default_rng(1)
+    n = 64
+    e = make_edges(rng.integers(0, 8, n), rng.integers(0, 100, n),
+                   {"v": jnp.asarray(rng.normal(0, 1, (n, 3)),
+                                     jnp.float32)},
+                   valid=rng.random(n) < 0.7)
+    s = sort_edges(e)
+    k2 = np.asarray(s.k2)
+    mk = np.asarray(s.mk)
+    valid = np.asarray(s.valid)
+    nv = int(valid.sum())
+    assert valid[:nv].all() and not valid[nv:].any()
+    pairs = list(zip(k2[:nv], mk[:nv]))
+    assert pairs == sorted(pairs)
+
+
+def test_compact_edges_gathers_valid_prefix():
+    rng = np.random.default_rng(2)
+    n = 40
+    e = make_edges(rng.integers(0, 8, n), np.arange(n),
+                   {"v": jnp.asarray(rng.normal(0, 1, n), jnp.float32)},
+                   valid=rng.random(n) < 0.5)
+    c = compact_edges(e, 64)
+    nv = int(np.asarray(e.valid).sum())
+    assert int(np.asarray(c.valid).sum()) == nv
+    got = set(np.asarray(c.mk)[np.asarray(c.valid)])
+    want = set(np.asarray(e.mk)[np.asarray(e.valid)])
+    assert got == want
+
+
+@given(st.integers(1, 10**7))
+@settings(max_examples=50, deadline=None)
+def test_next_bucket_power_of_two(n):
+    b = next_bucket(n)
+    assert b >= n and b >= 256
+    assert b & (b - 1) == 0
+    assert b < 2 * max(n, 256)
+
+
+def test_mean_reducer_finalize():
+    keys = jnp.asarray([0, 0, 1], jnp.int32)
+    vals = {"v": jnp.asarray([2.0, 4.0, 10.0], jnp.float32)}
+    from repro.core.kvstore import finalize_reduce
+    acc, counts = segment_reduce(mean_reducer(), keys, vals,
+                                 jnp.ones(3, bool), 2)
+    out = finalize_reduce(mean_reducer(), jnp.arange(2), acc, counts)
+    np.testing.assert_allclose(np.asarray(out["v"]), [3.0, 10.0])

@@ -1,0 +1,116 @@
+"""MRBG-Store: all four Table-4 read policies, incremental append,
+multi-batch retrieval, compaction, I/O accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mrbg_store import MRBGStore, POLICIES
+
+
+def _mk_store(policy, num_keys=200, value_bytes=8):
+    return MRBGStore(num_keys, value_bytes, policy=policy,
+                     gap_threshold=64, cache_bytes=4096,
+                     fix_window_bytes=512)
+
+
+def _append_random(store, rng, keys):
+    keys = np.sort(np.asarray(keys, np.int32))
+    mk = rng.integers(0, 1000, keys.shape[0]).astype(np.int32)
+    v2 = {"v": rng.normal(0, 1, keys.shape[0]).astype(np.float32)}
+    store.append(keys, mk, v2)
+    return keys, mk, v2
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_roundtrip_single_batch(policy):
+    rng = np.random.default_rng(0)
+    store = _mk_store(policy)
+    keys = np.repeat(np.arange(0, 50, 2), 3)      # chunks of 3 records
+    keys, mk, v2 = _append_random(store, rng, keys)
+    q = np.arange(0, 50, 2)
+    k2, mk_out, v2_out, lens = store.query(q)
+    assert (lens == 3).all()
+    np.testing.assert_array_equal(k2, keys)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_latest_version_wins_across_batches(policy):
+    rng = np.random.default_rng(1)
+    store = _mk_store(policy)
+    base = np.repeat(np.arange(20), 2)
+    _append_random(store, rng, base)
+    # new batch overwrites chunks 3 and 7 with single records
+    nk = np.array([3, 7], np.int32)
+    nmk = np.array([900, 901], np.int32)
+    nv = {"v": np.array([42.0, 43.0], np.float32)}
+    store.append(nk, nmk, nv)
+    k2, mk, v2, lens = store.query(np.array([3, 7]))
+    np.testing.assert_array_equal(mk, nmk)
+    np.testing.assert_allclose(v2["v"], nv["v"])
+    assert store.n_batches == 2
+
+
+def test_deletion_and_compaction():
+    rng = np.random.default_rng(2)
+    store = _mk_store("multi-dynamic-window")
+    _append_random(store, rng, np.repeat(np.arange(30), 2))
+    store.mark_deleted(np.array([5, 6]))
+    _, _, _, lens = store.query(np.array([5, 6, 7]))
+    assert list(lens) == [0, 0, 2]
+    live_before = store.live_bytes()
+    store.compact()
+    assert store.n_batches == 1
+    assert store.live_bytes() == live_before
+    assert store.file_bytes() == live_before     # obsolete space reclaimed
+    _, _, _, lens = store.query(np.array([5, 7]))
+    assert list(lens) == [0, 2]
+
+
+def test_policies_agree_but_io_differs():
+    """All four policies return identical data; dynamic windows do fewer
+    reads than index-only (Table 4's qualitative ordering)."""
+    rng = np.random.default_rng(3)
+    results = {}
+    stats = {}
+    for policy in POLICIES:
+        store = _mk_store(policy, num_keys=500)
+        rng2 = np.random.default_rng(3)
+        for _ in range(3):     # several batches => multiple windows
+            keys = np.repeat(np.sort(rng2.choice(500, 80, replace=False)), 2)
+            _append_random(store, rng2, keys)
+        q = np.arange(0, 500, 7)
+        k2, mk, v2, lens = store.query(q)
+        results[policy] = (k2.copy(), mk.copy(), lens.copy())
+        stats[policy] = (store.stats.n_reads, store.stats.bytes_read)
+    base = results[POLICIES[0]]
+    for policy in POLICIES[1:]:
+        np.testing.assert_array_equal(results[policy][0], base[0])
+        np.testing.assert_array_equal(results[policy][2], base[2])
+    assert stats["multi-dynamic-window"][0] <= stats["index-only"][0]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_query_random_subsets(seed):
+    rng = np.random.default_rng(seed % 2**31)
+    store = _mk_store("multi-dynamic-window", num_keys=100)
+    mirror = {}
+    for batch in range(3):
+        ks = np.sort(rng.choice(100, rng.integers(5, 30), replace=False))
+        ks_rep = np.repeat(ks, rng.integers(1, 4))
+        keys, mk, v2 = _append_random(store, rng, ks_rep)
+        for k in ks:
+            sel = keys == k
+            mirror[k] = (mk[sel], v2["v"][sel])
+    q = np.sort(rng.choice(100, 20, replace=False))
+    k2, mk, v2, lens = store.query(q)
+    off = 0
+    for key, ln in zip(q, lens):
+        if key in mirror:
+            want_mk, want_v = mirror[key]
+            assert ln == want_mk.shape[0]
+            np.testing.assert_array_equal(mk[off:off + ln], want_mk)
+            np.testing.assert_allclose(v2["v"][off:off + ln], want_v)
+        else:
+            assert ln == 0
+        off += ln

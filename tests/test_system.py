@@ -1,0 +1,160 @@
+"""End-to-end behaviour tests for the paper's system: incremental one-step
+and incremental iterative refreshes match from-scratch recomputation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps import pagerank as pr
+from repro.apps import wordcount as wc
+from repro.core.accumulator import AccumulatorJob
+from repro.core.incr_iter import IncrIterJob
+from repro.core.incremental import IncrementalJob, make_delta
+from repro.core.iterative import run_iterative
+
+
+def _wc_corpus(n=30, vocab=60, length=8, seed=0):
+    rng = np.random.default_rng(seed)
+    docs = rng.integers(0, vocab, size=(n, length)).astype(np.int32)
+    docs[rng.random(docs.shape) < 0.1] = -1
+    return docs
+
+
+def _update_delta(rows, old_rows, new_rows, values_key="w"):
+    n = len(rows)
+    dk = np.repeat(np.asarray(rows, np.int32), 2)
+    sg = np.tile(np.array([-1, 1], np.int8), n)
+    buf = np.empty((2 * n,) + old_rows.shape[1:], old_rows.dtype)
+    buf[0::2] = old_rows
+    buf[1::2] = new_rows
+    return make_delta(dk, dk, {values_key: jnp.asarray(buf)}, sg)
+
+
+class TestIncrementalOneStep:
+    VOCAB = 60
+
+    def test_incremental_equals_recompute(self):
+        docs = _wc_corpus()
+        spec = wc.make_spec(self.VOCAB)
+        job = IncrementalJob(spec, value_bytes=4)
+        job.initial_run(wc.make_input(np.arange(len(docs)), docs))
+
+        rng = np.random.default_rng(1)
+        new3 = rng.integers(0, self.VOCAB, (1, docs.shape[1])).astype(np.int32)
+        delta = _update_delta([3], docs[[3]], new3)
+        job.incremental_run(delta)
+
+        docs2 = docs.copy()
+        docs2[3] = new3[0]
+        want = wc.oracle(docs2, self.VOCAB)
+        got = job.view.as_dict()["c"]
+        np.testing.assert_allclose(got, want)
+
+    def test_insert_and_delete(self):
+        docs = _wc_corpus()
+        spec = wc.make_spec(self.VOCAB)
+        job = IncrementalJob(spec, value_bytes=4)
+        job.initial_run(wc.make_input(np.arange(len(docs)), docs))
+        rng = np.random.default_rng(2)
+        newdocs = rng.integers(0, self.VOCAB, (2, docs.shape[1])
+                               ).astype(np.int32)
+        # delete doc 0, insert docs 30, 31
+        dk = np.array([0, 30, 31], np.int32)
+        vals = {"w": jnp.asarray(np.concatenate([docs[[0]], newdocs]))}
+        delta = make_delta(dk, dk, vals, np.array([-1, 1, 1], np.int8))
+        job.incremental_run(delta)
+        valid = np.ones(32, bool)
+        valid[0] = False
+        all_docs = np.concatenate([docs, newdocs])
+        want = wc.oracle(all_docs, self.VOCAB, valid)
+        np.testing.assert_allclose(job.view.as_dict()["c"], want)
+
+    def test_chained_refreshes_vs_accumulator(self):
+        docs = _wc_corpus()
+        spec = wc.make_spec(self.VOCAB)
+        mrbg = IncrementalJob(spec, value_bytes=4)
+        mrbg.initial_run(wc.make_input(np.arange(len(docs)), docs))
+        acc = AccumulatorJob(spec)
+        acc.initial_run(wc.make_input(np.arange(len(docs)), docs))
+
+        rng = np.random.default_rng(3)
+        cur = docs.copy()
+        for epoch in range(4):
+            row = int(rng.integers(0, len(docs)))
+            new = rng.integers(0, self.VOCAB,
+                               (1, docs.shape[1])).astype(np.int32)
+            delta = _update_delta([row], cur[[row]], new)
+            mrbg.incremental_run(delta)
+            acc.incremental_run(delta)
+            cur[row] = new[0]
+        want = wc.oracle(cur, self.VOCAB)
+        np.testing.assert_allclose(mrbg.view.as_dict()["c"], want)
+        np.testing.assert_allclose(acc.view.as_dict()["c"], want)
+
+
+class TestIncrementalIterative:
+    def test_pagerank_refresh_matches_recompute(self):
+        S, F = 512, 4
+        nbrs = pr.random_graph(S, F, seed=3, p_edge=0.5)
+        spec = pr.make_spec(S)
+        job = IncrIterJob(spec, pr.make_struct(nbrs), value_bytes=4)
+        job.initial_converge(max_iters=150, tol=1e-7)
+
+        rng = np.random.default_rng(5)
+        rows = rng.choice(S, 5, replace=False)
+        new_rows = np.where(rng.random((5, F)) < 0.5,
+                            rng.integers(0, S, (5, F)), -1).astype(np.int32)
+        delta = _update_delta(rows, nbrs[rows], new_rows, "nbrs")
+        st, hist = job.refresh(delta, max_iters=150, tol=1e-7,
+                               cpc_threshold=0.0)
+        nbrs2 = nbrs.copy()
+        nbrs2[rows] = new_rows
+        want = pr.oracle(nbrs2, iters=400)
+        got = np.asarray(st.values["r"])
+        rel = np.abs(got - want) / np.maximum(want, 1e-9)
+        assert rel.max() < 5e-3, rel.max()
+
+    def test_cpc_bounded_error_and_less_work(self):
+        S, F = 2048, 4
+        nbrs = pr.random_graph(S, F, seed=3, p_edge=0.6)
+        spec = pr.make_spec(S)
+        rng = np.random.default_rng(9)
+        rows = rng.choice(S, 20, replace=False)
+        new_rows = np.where(rng.random((20, F)) < 0.6,
+                            rng.integers(0, S, (20, F)), -1).astype(np.int32)
+
+        results = {}
+        for ft in (0.01, 0.05):
+            job = IncrIterJob(spec, pr.make_struct(nbrs), value_bytes=4)
+            job.initial_converge(max_iters=200, tol=1e-7)
+            delta = _update_delta(rows, nbrs[rows], new_rows, "nbrs")
+            st, hist = job.refresh(delta, max_iters=60, tol=1e-7,
+                                   cpc_threshold=ft)
+            assert hist["mode"] == "i2"
+            nbrs2 = nbrs.copy()
+            nbrs2[rows] = new_rows
+            want = pr.oracle(nbrs2, iters=300)
+            got = np.asarray(st.values["r"])
+            rel = (np.abs(got - want) / np.maximum(want, 1e-9)).mean()
+            work = sum(l.n_affected_dks for l in hist["logs"])
+            results[ft] = (rel, work)
+        # paper §8.5: mean error small; larger threshold => less work
+        assert results[0.01][0] < 2e-2
+        assert results[0.05][1] < results[0.01][1]
+
+    def test_auto_mrbg_off_kmeans(self):
+        from repro.apps import kmeans
+        rng = np.random.default_rng(0)
+        k, dim = 3, 2
+        centers = rng.normal(0, 6, (k, dim))
+        pts = np.concatenate(
+            [rng.normal(c, 0.3, (40, dim)) for c in centers]
+        ).astype(np.float32)
+        init = pts[rng.choice(len(pts), k, replace=False)]
+        spec = kmeans.make_spec(k, dim, init)
+        job = IncrIterJob(spec, kmeans.make_struct(pts),
+                          value_bytes=4 * (dim + 1))
+        job.initial_converge(max_iters=50, tol=1e-6)
+        new = rng.normal(centers[0], 0.3, (3, dim)).astype(np.float32)
+        delta = _update_delta([0, 1, 2], pts[:3], new, "p")
+        st, hist = job.refresh(delta, max_iters=50, tol=1e-6)
+        assert hist["mode"] == "iterMR-fallback"   # paper Fig. 8 Kmeans
