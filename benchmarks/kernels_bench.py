@@ -1,6 +1,15 @@
 """Kernel micro-benchmarks: interpret-mode wall time (correctness-scale) +
-analytic TPU-v5e roofline estimates per kernel (the real perf claim)."""
+analytic TPU-v5e roofline estimates per kernel (the real perf claim).
+
+Run directly with ``--backend {xla,pallas,both}`` to time the dispatcher hot
+paths (``ops.sort_pairs`` / ``ops.segment_reduce``) plus an end-to-end
+``incremental_onestep`` refresh under each backend and record the comparison
+to ``BENCH_backend.json`` — the start of the perf trajectory.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax.numpy as jnp
@@ -62,3 +71,102 @@ def run():
     tpu_s = max(flops / PEAK_FLOPS, (s_ * f_ * 8 + v_ * 4) / HBM_BW)
     emit("kernel.spmv_ell.interp_s", dt * 1e6,
          f"tpu_est={tpu_s*1e6:.1f}us")
+
+
+# ---------------------------------------------------------------------------
+# Backend comparison: dispatcher hot paths + end-to-end incremental refresh
+# ---------------------------------------------------------------------------
+
+def _bench_ops(backend: str, results: dict) -> None:
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+
+    n = 4096
+    k2 = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    mk = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+    payload = {"v": jnp.asarray(rng.normal(0, 1, (n, 4)), jnp.float32)}
+    fn = lambda: ops.sort_pairs(k2, mk, payload,
+                                backend=backend).k2.block_until_ready()
+    fn()                                     # compile
+    _, dt = timed(fn, repeat=3)
+    emit(f"ops.sort_pairs.{backend}_s", dt * 1e6)
+    results["sort_pairs_us"] = dt * 1e6
+
+    seg = jnp.asarray(np.sort(rng.integers(0, 1024, n)), jnp.int32)
+    vals = {"v": jnp.asarray(rng.normal(0, 1, (n, 64)), jnp.float32)}
+    valid = jnp.ones(n, bool)
+    fn = lambda: ops.segment_reduce("sum", seg, vals, valid, 1024,
+                                    backend=backend)[1].block_until_ready()
+    fn()
+    _, dt = timed(fn, repeat=3)
+    emit(f"ops.segment_reduce.{backend}_s", dt * 1e6)
+    results["segment_reduce_us"] = dt * 1e6
+
+
+def _bench_incremental_onestep(backend: str, results: dict) -> None:
+    """End-to-end one-step refresh (wordcount, paper Section 3.3)."""
+    from repro.apps import wordcount as wc
+    from repro.core.incremental import IncrementalJob, make_delta
+
+    rng = np.random.default_rng(7)
+    n_docs, vocab, length = 512, 256, 16
+    docs = rng.integers(0, vocab, size=(n_docs, length)).astype(np.int32)
+    spec = wc.make_spec(vocab)
+    job = IncrementalJob(spec, value_bytes=4, backend=backend)
+
+    _, dt = timed(lambda: job.initial_run(
+        wc.make_input(np.arange(n_docs), docs)))
+    emit(f"incremental_onestep.initial.{backend}_s", dt * 1e6)
+    results["initial_us"] = dt * 1e6
+
+    def delta_for(row, seed):
+        new = np.random.default_rng(seed).integers(
+            0, vocab, (1, length)).astype(np.int32)
+        dk = np.repeat(np.asarray([row], np.int32), 2)
+        sg = np.tile(np.array([-1, 1], np.int8), 1)
+        buf = np.empty((2, length), docs.dtype)
+        buf[0::2] = docs[[row]]
+        buf[1::2] = new
+        return make_delta(dk, dk, {"w": jnp.asarray(buf)}, sg)
+
+    job.incremental_run(delta_for(3, 1))     # compile the delta path
+    _, dt = timed(lambda: job.incremental_run(delta_for(5, 2)), repeat=3)
+    emit(f"incremental_onestep.refresh.{backend}_s", dt * 1e6)
+    results["refresh_us"] = dt * 1e6
+
+
+def run_backend_compare(backends, out_path: str = "BENCH_backend.json"):
+    import jax
+    report = {"platform": jax.default_backend(), "backends": {}}
+    for bk in backends:
+        res: dict = {}
+        _bench_ops(bk, res)
+        _bench_incremental_onestep(bk, res)
+        report["backends"][bk] = res
+    if ("xla" in report["backends"] and "pallas" in report["backends"]):
+        x = report["backends"]["xla"]["refresh_us"]
+        p = report["backends"]["pallas"]["refresh_us"]
+        report["refresh_speedup_xla_over_pallas"] = p / max(x, 1e-9)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("xla", "pallas", "both"),
+                    default="both",
+                    help="which shuffle/reduce backend(s) to time")
+    ap.add_argument("--out", default="BENCH_backend.json")
+    ap.add_argument("--micro", action="store_true",
+                    help="also run the legacy kernel micro-benchmarks")
+    args = ap.parse_args()
+    if args.micro:
+        run()
+    backends = ("xla", "pallas") if args.backend == "both" else (args.backend,)
+    run_backend_compare(backends, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@ import numpy as np
 
 
 def _flatten(tree):
-    leaves = jax.tree.flatten_with_path(tree)[0]
+    # jax.tree.flatten_with_path only exists on newer jax; go via tree_util
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     dtypes = {}
     for path, leaf in leaves:

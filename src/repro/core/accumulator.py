@@ -29,6 +29,7 @@ from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce,
     next_bucket, segment_reduce, sort_edges,
 )
+from repro.kernels import ops
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -41,8 +42,8 @@ def _delta_map_acc(spec_static, delta: DeltaKV) -> Edges:
     return map_fn(kv, delta.sign)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _accumulate(reducer: Reducer, key_cap: int, edges: Edges,
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _accumulate(reducer: Reducer, key_cap: int, backend, edges: Edges,
                 affected_keys: jax.Array, old_acc: Any, old_counts: jax.Array):
     """Fold the delta edges' contribution into the old accumulators."""
     if reducer.kind in ("sum", "mean"):
@@ -57,10 +58,11 @@ def _accumulate(reducer: Reducer, key_cap: int, edges: Edges,
     local = jnp.searchsorted(affected_keys, edges.k2).astype(jnp.int32)
     in_set = jnp.take(affected_keys, jnp.clip(local, 0, key_cap - 1)) == edges.k2
     ok = edges.valid & in_set
-    acc_d, _ = segment_reduce(reducer, local, v2, ok, key_cap)
-    cnt_d = jax.ops.segment_sum(
-        jnp.where(ok, edges.sign.astype(jnp.int32), 0),
-        jnp.where(ok, local, key_cap), num_segments=key_cap + 1)[:key_cap]
+    acc_d, _ = segment_reduce(reducer, local, v2, ok, key_cap,
+                              backend=backend)
+    # signed count delta: sum of ±1 signs per affected key
+    cnt_d, _ = segment_reduce("sum", local, edges.sign.astype(jnp.int32),
+                              ok, key_cap, backend=backend)
 
     if reducer.kind in ("sum", "mean"):
         acc = jax.tree.map(lambda o, d: o + d.astype(o.dtype), old_acc, acc_d)
@@ -87,11 +89,12 @@ class AccumulatorJob:
     values.
     """
 
-    def __init__(self, spec: JobSpec):
+    def __init__(self, spec: JobSpec, backend=None):
         if not (spec.reducer.invertible or spec.reducer.kind in
                 ("min", "max", "sum", "mean")):
             raise ValueError("reducer is not accumulative")
         self.spec = spec
+        self.backend = backend
         self.raw_acc: Dict[str, np.ndarray] = {}
         self.view: ResultView = None  # type: ignore
 
@@ -105,7 +108,8 @@ class AccumulatorJob:
             DeltaKV(inp.keys, inp.keys, inp.values, inp.valid,
                     jnp.ones(inp.capacity, jnp.int8)))
         acc, counts = segment_reduce(spec.reducer, edges.k2, edges.v2,
-                                     edges.valid, spec.num_keys)
+                                     edges.valid, spec.num_keys,
+                                     backend=self.backend)
         keys = jnp.arange(spec.num_keys, dtype=jnp.int32)
         values = finalize_reduce(spec.reducer, keys, acc, counts)
         self.raw_acc = {n: np.array(a) for n, a in acc.items()}
@@ -138,9 +142,10 @@ class AccumulatorJob:
 
         old_acc = {n: jnp.asarray(a[idx]) for n, a in self.raw_acc.items()}
         old_counts = jnp.asarray(self.view.counts[idx].astype(np.int32))
-        acc, counts, values = _accumulate(red, key_cap, dev_edges,
-                                          jnp.asarray(keys_pad), old_acc,
-                                          old_counts)
+        acc, counts, values = _accumulate(red, key_cap,
+                                          ops.resolve_backend(self.backend),
+                                          dev_edges, jnp.asarray(keys_pad),
+                                          old_acc, old_counts)
         sel = slice(0, affected.size)
         for n, a in acc.items():
             self.raw_acc[n][affected] = np.asarray(a)[sel]

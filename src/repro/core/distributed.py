@@ -37,6 +37,7 @@ from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, finalize_reduce, segment_reduce,
 )
 from repro.core.iterative import IterSpec, State
+from repro.kernels import ops
 
 
 def partition_of(keys: jax.Array, n: int) -> jax.Array:
@@ -98,11 +99,15 @@ def unpartition_state(parts: Dict[str, np.ndarray], num_state: int):
 
 def make_distributed_step(spec: IterSpec, mesh: Mesh, axis: str,
                           shuffle_cap: int, *, hierarchical: bool = False,
-                          pod_axis: Optional[str] = None):
+                          pod_axis: Optional[str] = None,
+                          backend: Optional[str] = None):
     """Build the jitted SPMD iteration over ``axis`` (+ optional pod axis).
 
     shuffle_cap: per (src, dst) shard edge capacity for the all_to_all.
+    ``backend`` selects the shard-local shuffle/reduce implementation
+    (resolved here, outside the jit, so rebuilding the step retraces).
     """
+    bk = ops.resolve_backend(backend)
     n_parts = mesh.shape[axis] * (mesh.shape[pod_axis] if pod_axis else 1)
     axes = (pod_axis, axis) if pod_axis else (axis,)
     num_state = spec.num_state
@@ -129,9 +134,11 @@ def make_distributed_step(spec: IterSpec, mesh: Mesh, axis: str,
         # shuffle: bucket by destination partition
         dest = partition_of(edges.k2, n_parts)
         dest = jnp.where(edges.valid, dest, n_parts)
-        # stable sort by dest, then rank within dest
-        order = jnp.argsort(dest, stable=True)
-        sdest = jnp.take(dest, order)
+        # stable sort by dest (via the backend dispatcher), then rank
+        # within dest
+        sorted_dest = ops.sort_pairs(dest, None, num_keys=1, backend=bk)
+        sdest = sorted_dest.k2
+        order = sorted_dest.perm
         rank = jnp.arange(sdest.shape[0]) - jnp.searchsorted(
             sdest, sdest, side="left")
         send_k2 = jnp.full((n_parts, shuffle_cap), INVALID_KEY, jnp.int32)
@@ -181,7 +188,7 @@ def make_distributed_step(spec: IterSpec, mesh: Mesh, axis: str,
             lambda a: a.reshape((-1,) + a.shape[2:]), recv_v2)
         acc, counts = segment_reduce(spec.reducer,
                                      jnp.where(rvalid, local_ids, rows),
-                                     rv2, rvalid, rows)
+                                     rv2, rvalid, rows, backend=bk)
         my = jax.lax.axis_index(axes[-1])
         if pod_axis:
             my = my + jax.lax.axis_index(pod_axis) * mesh.shape[axis]
@@ -208,10 +215,10 @@ def _bshape(mask, vals):
 def run_distributed(spec: IterSpec, mesh: Mesh, struct_parts, state_parts,
                     *, axis: str = "data", pod_axis: Optional[str] = None,
                     shuffle_cap: int = 4096, max_iters: int = 50,
-                    tol: float = 1e-6):
+                    tol: float = 1e-6, backend: Optional[str] = None):
     """Drive the distributed prime loop to convergence."""
     step = make_distributed_step(spec, mesh, axis, shuffle_cap,
-                                 pod_axis=pod_axis)
+                                 pod_axis=pod_axis, backend=backend)
     skeys, svals, svalid = struct_parts
     state = state_parts
     from repro.core.iterative import default_difference

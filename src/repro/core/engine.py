@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, make_kv, segment_reduce, sort_edges,
 )
+from repro.kernels import ops
 
 # map_fn(kv, record_sign) -> Edges.  Fanout must be static; helpers below
 # derive globally unique MKs from (record id, slot).
@@ -61,24 +62,28 @@ def make_mk(record_ids: jax.Array, slot: int, fanout: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def _run(spec_static, preserve: bool, inp: KV, record_sign: jax.Array):
-    map_fn, reducer, num_keys = spec_static
+    map_fn, reducer, num_keys, backend = spec_static
     edges = map_fn(inp, record_sign)
     acc, counts = segment_reduce(reducer, edges.k2, edges.v2, edges.valid,
-                                 num_keys)
+                                 num_keys, backend=backend)
     keys = jnp.arange(num_keys, dtype=jnp.int32)
     values = finalize_reduce(reducer, keys, acc, counts)
     results = KV(keys, values, counts > 0)
-    preserved = sort_edges(edges) if preserve else None
+    preserved = sort_edges(edges, backend=backend) if preserve else None
     return results, preserved, counts
 
 
-def run_onestep(spec: JobSpec, inp: KV, *, preserve: bool = False) -> JobResult:
+def run_onestep(spec: JobSpec, inp: KV, *, preserve: bool = False,
+                backend: Optional[str] = None) -> JobResult:
     """Run a full (non-incremental) MapReduce job.
 
     ``preserve=True`` additionally returns the sorted MRBGraph edges, ready to
-    be ingested by :class:`repro.core.mrbg_store.MRBGStore`.
+    be ingested by :class:`repro.core.mrbg_store.MRBGStore`.  ``backend``
+    overrides the shuffle/reduce backend (resolved outside the jit so that
+    switching backends retraces).
     """
-    spec_static = (spec.map_fn, spec.reducer, spec.num_keys)
+    spec_static = (spec.map_fn, spec.reducer, spec.num_keys,
+                   ops.resolve_backend(backend))
     sign = jnp.ones(inp.capacity, jnp.int8)
     results, preserved, counts = _run(spec_static, preserve, inp, sign)
     return JobResult(results, preserved, counts)

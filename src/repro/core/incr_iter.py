@@ -41,6 +41,7 @@ from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, edges_to_host, next_bucket, sort_edges,
 )
 from repro.core.mrbg_store import MRBGStore
+from repro.kernels import ops
 
 _IK = np.int32(2**31 - 1)
 
@@ -63,8 +64,10 @@ class IncrIterJob:
     def __init__(self, spec: IterSpec, struct: KV, *, value_bytes: int = 8,
                  policy: str = "multi-dynamic-window",
                  cpc_threshold: float = 0.0,
-                 pdelta_threshold: float = 0.5):
+                 pdelta_threshold: float = 0.5,
+                 backend: Optional[str] = None):
         self.spec = spec
+        self.backend = backend
         self.cpc_threshold = cpc_threshold
         self.pdelta_threshold = pdelta_threshold
         self.store = MRBGStore(spec.num_state, value_bytes, policy=policy)
@@ -119,7 +122,7 @@ class IncrIterJob:
         """Job A_0: full iterative run; preserve final-iteration MRBGraph."""
         state, hist = run_iterative(self.spec, self._struct_kv(), None,
                                     max_iters=max_iters, tol=tol,
-                                    preserve_last=True)
+                                    preserve_last=True, backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self._preserve(hist["last_edges"])
@@ -208,25 +211,26 @@ class IncrIterJob:
         exceeded, caller should fall back)."""
         spec = self.spec
         state_vals = self.state.values
+        bk = ops.resolve_backend(self.backend)
 
         if spec.stable_topology:
             edges = _delta_map_iter(
-                (spec.map_fn, spec.replicate_state), kv,
+                (spec.map_fn, spec.replicate_state, bk), kv,
                 jnp.asarray(record_ids), jnp.asarray(sign, jnp.int8),
                 jnp.asarray(sel_dks), state_vals)
         else:
             # topology may change: tombstone-replay with the last-emitted
             # state, then insert with the current state
             old_edges = _delta_map_iter(
-                (spec.map_fn, spec.replicate_state), kv,
+                (spec.map_fn, spec.replicate_state, bk), kv,
                 jnp.asarray(record_ids),
                 -jnp.abs(jnp.asarray(sign, jnp.int8)),
                 jnp.asarray(sel_dks), self.emitted_values)
             new_edges = _delta_map_iter(
-                (spec.map_fn, spec.replicate_state), kv,
+                (spec.map_fn, spec.replicate_state, bk), kv,
                 jnp.asarray(record_ids), jnp.asarray(sign, jnp.int8),
                 jnp.asarray(sel_dks), state_vals)
-            edges = _concat_edges(old_edges, new_edges)
+            edges = _concat_edges(old_edges, new_edges, backend=bk)
 
         dh = edges_to_host(edges, sorted_valid_first=True)
         affected = np.unique(dh["k2"])
@@ -252,8 +256,9 @@ class IncrIterJob:
         keys_pad = np.full(key_cap, _IK, np.int32)
         keys_pad[:affected.size] = affected.astype(np.int32)
 
-        merged, values, counts = _merge_reduce(spec.reducer, key_cap, pres,
-                                               delt, jnp.asarray(keys_pad))
+        merged, values, counts = _merge_reduce(spec.reducer, key_cap, bk,
+                                               pres, delt,
+                                               jnp.asarray(keys_pad))
 
         # preserve merged chunks
         mh = edges_to_host(merged)
@@ -309,7 +314,7 @@ class IncrIterJob:
         t0 = time.perf_counter()
         state, hist = run_iterative(self.spec, self._struct_kv(), self.state,
                                     max_iters=max_iters, tol=tol,
-                                    preserve_last=True)
+                                    preserve_last=True, backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self.store = MRBGStore(self.spec.num_state,
@@ -335,20 +340,20 @@ import functools
 def _delta_map_iter(spec_static, kv: KV, record_ids, sign, sel_dks,
                     state_values):
     """Prime Map over a selected subset of structure records."""
-    map_fn, replicate = spec_static
+    map_fn, replicate, backend = spec_static
     if replicate:
         dv = state_values
     else:
         dv = jax.tree.map(lambda a: jnp.take(a, sel_dks, axis=0),
                           state_values)
     edges = map_fn(KV(kv.keys, kv.values, kv.valid), dv, sign)
-    return sort_edges(edges)
+    return sort_edges(edges, backend=backend)
 
 
-@jax.jit
-def _concat_edges(a: Edges, b: Edges) -> Edges:
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _concat_edges(a: Edges, b: Edges, backend: Optional[str] = None) -> Edges:
     return sort_edges(Edges(
         jnp.concatenate([a.k2, b.k2]), jnp.concatenate([a.mk, b.mk]),
         jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a.v2, b.v2),
         jnp.concatenate([a.valid, b.valid]),
-        jnp.concatenate([a.sign, b.sign])))
+        jnp.concatenate([a.sign, b.sign])), backend=backend)

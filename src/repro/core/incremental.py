@@ -33,6 +33,7 @@ from repro.core.kvstore import (
     next_bucket, segment_reduce, sort_edges,
 )
 from repro.core.mrbg_store import MRBGStore
+from repro.kernels import ops
 
 
 class DeltaKV(NamedTuple):
@@ -103,14 +104,17 @@ class IncrementalJob:
     """Owns the preserved MRBGraph + result view of one MapReduce job."""
 
     def __init__(self, spec: JobSpec, value_bytes: int = 8,
-                 policy: str = "multi-dynamic-window"):
+                 policy: str = "multi-dynamic-window",
+                 backend: Optional[str] = None):
         self.spec = spec
+        self.backend = backend
         self.store = MRBGStore(spec.num_keys, value_bytes, policy=policy)
         self.view: Optional[ResultView] = None
 
     # -- initial run -------------------------------------------------------
     def initial_run(self, inp: KV) -> ResultView:
-        res = run_onestep(self.spec, inp, preserve=True)
+        res = run_onestep(self.spec, inp, preserve=True,
+                          backend=self.backend)
         host = edges_to_host(res.edges)
         self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
         self.view = ResultView.from_job(self.spec.num_keys, res.results,
@@ -120,7 +124,8 @@ class IncrementalJob:
     # -- incremental run ---------------------------------------------------
     def incremental_run(self, delta: DeltaKV) -> ResultView:
         assert self.view is not None, "initial_run first"
-        stats = incremental_onestep(self.spec, delta, self.store, self.view)
+        stats = incremental_onestep(self.spec, delta, self.store, self.view,
+                                    backend=self.backend)
         return self.view
 
     def refresh_stats(self) -> Dict[str, Any]:
@@ -148,14 +153,14 @@ def _v2_tree(v2_dict, template):
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _delta_map(spec_static, delta: DeltaKV) -> Edges:
-    map_fn, = spec_static
+    map_fn, backend = spec_static
     kv = KV(delta.keys, delta.values, delta.valid)
     edges = map_fn(kv, delta.sign)
-    return sort_edges(edges)
+    return sort_edges(edges, backend=backend)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _merge_reduce(reducer: Reducer, key_cap: int,
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _merge_reduce(reducer: Reducer, key_cap: int, backend: Optional[str],
                   pres: Edges, delta: Edges, affected_keys: jax.Array):
     """Join preserved chunks with delta edges; reduce affected groups.
 
@@ -169,7 +174,8 @@ def _merge_reduce(reducer: Reducer, key_cap: int,
     valid = jnp.concatenate([pres.valid, delta.valid])
     sign = jnp.concatenate([pres.sign, delta.sign])
     v2 = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pres.v2, delta.v2)
-    merged = sort_edges(Edges(k2, mk, v2, valid, sign), num_keys=2)
+    merged = sort_edges(Edges(k2, mk, v2, valid, sign), num_keys=2,
+                        backend=backend)
 
     # last-writer-wins per (k2, mk); tombstones delete
     nk2 = jnp.roll(merged.k2, -1)
@@ -187,16 +193,19 @@ def _merge_reduce(reducer: Reducer, key_cap: int,
     in_set = jnp.take(affected_keys,
                       jnp.clip(local, 0, key_cap - 1)) == merged.k2
     acc, counts = segment_reduce(reducer, local, merged.v2,
-                                 merged.valid & in_set, key_cap)
+                                 merged.valid & in_set, key_cap,
+                                 backend=backend)
     values = finalize_reduce(reducer, affected_keys, acc, counts)
     return merged, values, counts
 
 
 def incremental_onestep(spec: JobSpec, delta: DeltaKV, store: MRBGStore,
-                        view: ResultView) -> Dict[str, Any]:
+                        view: ResultView,
+                        backend: Optional[str] = None) -> Dict[str, Any]:
     """One incremental refresh; patches ``view`` and ``store`` in place."""
+    bk = ops.resolve_backend(backend)
     # 1-2) incremental Map + shuffle of the delta MRBGraph
-    delta_edges = _delta_map((spec.map_fn,), delta)
+    delta_edges = _delta_map((spec.map_fn, bk), delta)
     dh = edges_to_host(delta_edges, sorted_valid_first=True)
 
     # 3) affected keys, queried against the store in sorted order
@@ -219,8 +228,8 @@ def incremental_onestep(spec: JobSpec, delta: DeltaKV, store: MRBGStore,
     keys_pad = np.full(key_cap, np.int32(2**31 - 1), np.int32)
     keys_pad[:affected.size] = affected.astype(np.int32)
 
-    merged, values, counts = _merge_reduce(spec.reducer, key_cap, pres, delt,
-                                           jnp.asarray(keys_pad))
+    merged, values, counts = _merge_reduce(spec.reducer, key_cap, bk, pres,
+                                           delt, jnp.asarray(keys_pad))
 
     # 6) preserve merged chunks + patch results
     mh = edges_to_host(merged)

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, segment_reduce, sort_edges,
 )
+from repro.kernels import ops
 
 # prime Map: map_fn(struct_kv, state_dv, record_sign) -> Edges
 #   state_dv is the gathered DV pytree aligned to the structure records
@@ -88,7 +89,7 @@ class State:
 def _iter_step(spec_static, preserve: bool, struct: KV, state_values: Any,
                dks: jax.Array):
     """One prime Map -> shuffle -> prime Reduce pass over the full input."""
-    map_fn, reducer, project, num_state, replicate = spec_static
+    map_fn, reducer, project, num_state, replicate, backend = spec_static
     if replicate:
         dv = state_values
     else:
@@ -96,17 +97,18 @@ def _iter_step(spec_static, preserve: bool, struct: KV, state_values: Any,
     sign = jnp.ones(struct.capacity, jnp.int8)
     edges = map_fn(struct, dv, sign)
     acc, counts = segment_reduce(reducer, edges.k2, edges.v2, edges.valid,
-                                 num_state)
+                                 num_state, backend=backend)
     keys = jnp.arange(num_state, dtype=jnp.int32)
     new_values = finalize_reduce(reducer, keys, acc, counts)
-    preserved = sort_edges(edges) if preserve else None
+    preserved = sort_edges(edges, backend=backend) if preserve else None
     return new_values, counts, preserved
 
 
 def run_iterative(spec: IterSpec, struct: KV, state: Optional[State] = None,
                   *, max_iters: int = 50, tol: float = 1e-4,
                   preserve_last: bool = False,
-                  on_iteration: Optional[Callable] = None):
+                  on_iteration: Optional[Callable] = None,
+                  backend: Optional[str] = None):
     """Run the prime loop to convergence (iterMR recomp mode).
 
     Returns (state, history dict).  ``preserve_last`` additionally returns the
@@ -116,7 +118,7 @@ def run_iterative(spec: IterSpec, struct: KV, state: Optional[State] = None,
         state = State.init(spec)
     diff_fn = spec.difference or default_difference
     spec_static = (spec.map_fn, spec.reducer, spec.project, spec.num_state,
-                   spec.replicate_state)
+                   spec.replicate_state, ops.resolve_backend(backend))
     dks = spec.project(struct.keys) if not spec.replicate_state else \
         jnp.zeros(struct.capacity, jnp.int32)
     history = {"iters": 0, "max_change": []}
@@ -149,10 +151,10 @@ def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
     def on_it(it, st, ch):
         # the extra structure shuffle: sort structure kv-pairs by key and
         # gather every value column through the permutation
-        iota = jnp.arange(struct.keys.shape[0], dtype=jnp.int32)
-        _, perm = jax.lax.sort((struct.keys, iota), num_keys=1)
-        _ = jax.tree.map(lambda a: jnp.take(a, perm, axis=0).block_until_ready()
+        res = ops.sort_pairs(struct.keys, None, struct.values, num_keys=1,
+                             backend=kw.get("backend"))
+        _ = jax.tree.map(lambda a: a.block_until_ready()
                          if hasattr(a, 'block_until_ready') else a,
-                         struct.values)
+                         res.payload)
     kw.setdefault("on_iteration", on_it)
     return run_iterative(spec, struct, state, **kw)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 INVALID_KEY = jnp.int32(2**31 - 1)
 _HASH_MULT = np.uint32(2654435761)
 
@@ -85,16 +87,13 @@ def hash32(keys: jax.Array, buckets: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Sorting (the TPU analogue of Hadoop's shuffle-sort)
+# Sorting (the TPU analogue of Hadoop's shuffle-sort) — thin wrappers over
+# the backend dispatcher in repro.kernels.ops
 # ---------------------------------------------------------------------------
 
-def _flatten_values(values):
-    leaves, treedef = jax.tree.flatten(values)
-    return leaves, treedef
-
-
-def sort_edges(edges: Edges, *, num_keys: int = 2) -> Edges:
-    """Lexicographic stable sort of edges by (k2, mk[, sign]).
+def sort_edges(edges: Edges, *, num_keys: int = 2,
+               backend: Optional[str] = None) -> Edges:
+    """Lexicographic stable sort of edges by (k2[, mk]).
 
     Invalid edges get k2 = INVALID_KEY so they land at the tail.  This mirrors
     the MapReduce shuffle: intermediate kv-pairs arrive at a Reduce task sorted
@@ -102,24 +101,18 @@ def sort_edges(edges: Edges, *, num_keys: int = 2) -> Edges:
     sequential.
     """
     k2 = jnp.where(edges.valid, edges.k2, INVALID_KEY)
-    n = k2.shape[0]
-    iota = jnp.arange(n, dtype=jnp.int32)
-    if num_keys <= 1:
-        *_, perm = jax.lax.sort((k2, iota), num_keys=1, is_stable=True)
-    else:
-        *_, perm = jax.lax.sort((k2, edges.mk, iota), num_keys=2,
-                                is_stable=True)
-    g = lambda a: jnp.take(a, perm, axis=0)
-    return Edges(g(k2), g(edges.mk), jax.tree.map(g, edges.v2),
-                 g(edges.valid), g(edges.sign))
+    res = ops.sort_pairs(k2, edges.mk, (edges.v2, edges.valid, edges.sign),
+                         num_keys=num_keys, backend=backend)
+    v2, valid, sign = res.payload
+    return Edges(res.k2, res.mk, v2, valid, sign)
 
 
-def sort_kv(kv: KV) -> KV:
+def sort_kv(kv: KV, *, backend: Optional[str] = None) -> KV:
     keys = jnp.where(kv.valid, kv.keys, INVALID_KEY)
-    iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
-    *_, perm = jax.lax.sort((keys, iota), num_keys=1, is_stable=True)
-    g = lambda a: jnp.take(a, perm, axis=0)
-    return KV(g(keys), jax.tree.map(g, kv.values), g(kv.valid))
+    res = ops.sort_pairs(keys, None, (kv.values, kv.valid), num_keys=1,
+                         backend=backend)
+    values, valid = res.payload
+    return KV(res.k2, values, valid)
 
 
 # ---------------------------------------------------------------------------
@@ -182,45 +175,21 @@ def mean_reducer(finalize=None) -> Reducer:
     return Reducer("mean", finalize)
 
 
-def _segment_op(kind: str):
-    return {
-        "sum": jax.ops.segment_sum,
-        "mean": jax.ops.segment_sum,
-        "min": jax.ops.segment_min,
-        "max": jax.ops.segment_max,
-    }[kind]
-
-
 def segment_reduce(reducer: Reducer, segment_ids: jax.Array, values: Any,
                    valid: jax.Array, num_segments: int,
-                   indices_are_sorted: bool = False):
+                   indices_are_sorted: bool = False,
+                   backend: Optional[str] = None):
     """Reduce ``values`` into ``num_segments`` groups.
 
+    Thin wrapper over the backend dispatcher (:mod:`repro.kernels.ops`).
     Returns (accumulated values pytree [K, ...], counts [K] int32).
     Invalid rows are routed to a scratch segment (index ``num_segments``)
     so they never pollute real groups.
     """
-    seg = jnp.where(valid, segment_ids, num_segments).astype(jnp.int32)
-    op = _segment_op(reducer.kind)
-
-    def _one(leaf):
-        if reducer.kind in ("min", "max"):
-            # mask invalid rows to the identity so segment_min/max ignore them
-            ident = reducer.identity_like(leaf)
-            mask = valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
-            leaf = jnp.where(mask, leaf, ident)
-        else:
-            mask = valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
-            leaf = jnp.where(mask, leaf, 0).astype(leaf.dtype)
-        out = op(leaf, seg, num_segments=num_segments + 1,
-                 indices_are_sorted=indices_are_sorted)
-        return out[:num_segments]
-
-    acc = jax.tree.map(_one, values)
-    counts = jax.ops.segment_sum(valid.astype(jnp.int32), seg,
-                                 num_segments=num_segments + 1,
-                                 indices_are_sorted=indices_are_sorted)
-    return acc, counts[:num_segments]
+    return ops.segment_reduce(reducer, segment_ids, values, valid,
+                              num_segments,
+                              indices_are_sorted=indices_are_sorted,
+                              backend=backend)
 
 
 def finalize_reduce(reducer: Reducer, keys: jax.Array, acc: Any,

@@ -1,13 +1,17 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
 Each kernel module provides the ``pl.pallas_call`` kernel with explicit
-BlockSpec VMEM tiling; ``ops.py`` holds the jitted wrappers and ``ref.py``
-the pure-jnp oracles.
+BlockSpec VMEM tiling; ``ops.py`` is the backend-dispatch layer (the
+jitted ``sort_pairs`` / ``segment_reduce`` entry points every engine layer
+routes through, selectable via ``REPRO_BACKEND`` / ``ops.set_backend``)
+and ``ref.py`` holds the pure-jnp oracles the tests compare against.
 
 On this CPU container the kernels run with ``interpret=True`` (the kernel
 body executes in Python); on TPU the same code lowers natively.  The
 hardware adaptation: MapReduce's Reduce becomes a one-hot MXU
-segment-matmul; the shuffle sort becomes an in-VMEM bitonic network;
-PageRank's gather-scatter becomes output-block-tiled one-hot accumulation;
-attention uses the standard streaming-softmax flash schedule.
+segment-matmul (masked one-hot select for min/max); the shuffle sort
+becomes an in-VMEM bitonic network over (K2, MK, index) lanes with a
+permutation output; PageRank's gather-scatter becomes output-block-tiled
+one-hot accumulation; attention uses the standard streaming-softmax flash
+schedule.
 """

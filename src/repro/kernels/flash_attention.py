@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import mha_ref  # noqa: F401  (back-compat)
+
 NEG = -2.0e38
 
 
@@ -37,10 +39,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_blk: int, causal: bool,
 
     def body(kv_i, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(kv_i * kv_blk, kv_blk),
-                            slice(None)))
-        v = pl.load(v_ref, (0, 0, pl.dslice(kv_i * kv_blk, kv_blk),
-                            slice(None)))
+        k = pl.load(k_ref, (slice(0, 1), slice(0, 1),
+                            pl.dslice(kv_i * kv_blk, kv_blk),
+                            slice(None)))[0, 0]
+        v = pl.load(v_ref, (slice(0, 1), slice(0, 1),
+                            pl.dslice(kv_i * kv_blk, kv_blk),
+                            slice(None)))[0, 0]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
         s = s / (hd ** 0.5)
         if softcap > 0:
@@ -105,27 +109,3 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(q, k, v)
     return out
-
-
-def mha_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
-    """Dense oracle with identical masking semantics."""
-    b, h, sq, hd = q.shape
-    kh, sk = k.shape[1], k.shape[2]
-    rep = h // kh
-    kx = jnp.repeat(k, rep, axis=1)
-    vx = jnp.repeat(v, rep, axis=1)
-    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                   kx.astype(jnp.float32)) / (hd ** 0.5)
-    if softcap > 0:
-        s = jnp.tanh(s / softcap) * softcap
-    qp = jnp.arange(sq)[:, None]
-    kp = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), bool)
-    if causal:
-        mask &= kp <= qp
-    if window > 0:
-        mask &= (qp - kp) < window
-    s = jnp.where(mask[None, None], s, NEG)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)
-                      ).astype(q.dtype)

@@ -1,0 +1,233 @@
+"""Backend dispatch for the engine's two hot paths: shuffle-sort and Reduce.
+
+Every engine layer (one-step, incremental, iterative, incremental-iterative,
+distributed) funnels its shuffle and Reduce work through the two entry
+points here:
+
+  * :func:`sort_pairs`      — lexicographic stable sort of (k2, mk) with a
+    permutation output; arbitrary pytree payloads are gathered once.
+  * :func:`segment_reduce`  — segment reduction for all four ``Reducer``
+    monoids (sum / min / max / mean) over pytree values, with an explicit
+    validity mask and per-segment counts.
+
+Backends:
+
+  * ``"xla"``    — jax.lax.sort / jax.ops.segment_* (the portable fallback).
+  * ``"pallas"`` — the Pallas TPU kernels (bitonic network, one-hot MXU
+    matmul); interpret mode on CPU, native lowering on TPU.
+  * ``"auto"``   — pallas on TPU, xla elsewhere.
+
+Selection precedence: per-call ``backend=`` argument > :func:`set_backend`
+(or the :class:`use_backend` context manager) > the ``REPRO_BACKEND``
+environment variable > ``"auto"``.  Callers that jit must resolve the
+backend *outside* the traced function (``resolve_backend``) and pass it as
+a static argument so that flipping the backend retraces instead of hitting
+a stale cache — the engine layers all follow this pattern.
+
+Both backends implement the identical contract — same masking semantics,
+same tie-breaking (total order by (k2, mk, row index)) — so they agree
+bit-for-bit on integer data and to reordering-of-additions on floats;
+``tests/test_backend_parity.py`` holds them to it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("xla", "pallas", "auto")
+_ENV_VAR = "REPRO_BACKEND"
+_configured: Optional[str] = None
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Set the process-wide backend (``None`` reverts to env/auto)."""
+    global _configured
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {name!r}")
+    _configured = name
+
+
+def get_backend() -> str:
+    """The currently configured (possibly still ``'auto'``) backend."""
+    if _configured is not None:
+        return _configured
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"{_ENV_VAR} must be one of {BACKENDS}, got {env!r}")
+        return env
+    return "auto"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve the per-call override / config / env chain to xla|pallas."""
+    b = backend if backend is not None else get_backend()
+    if b not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {b!r}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return b
+
+
+class use_backend:
+    """Context manager: ``with use_backend('pallas'): ...``"""
+
+    def __init__(self, name: Optional[str]):
+        self.name = name
+        self.prev: Optional[str] = None
+
+    def __enter__(self):
+        global _configured
+        self.prev = _configured
+        set_backend(self.name)
+        return self
+
+    def __exit__(self, *exc):
+        global _configured
+        _configured = self.prev
+        return False
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# sort_pairs: the shuffle sort
+# ---------------------------------------------------------------------------
+
+class SortedPairs(NamedTuple):
+    k2: jax.Array        # [N] sorted primary keys
+    mk: jax.Array        # [N] co-sorted secondary keys
+    payload: Any         # pytree of [N, ...] gathered through perm
+    perm: jax.Array      # [N] int32, k2_sorted == k2[perm]
+
+
+def sort_pairs(k2: jax.Array, mk: Optional[jax.Array] = None,
+               payload: Any = None, *, num_keys: int = 2,
+               backend: Optional[str] = None) -> SortedPairs:
+    """Stable lexicographic sort by (k2[, mk]); ties keep input order.
+
+    Validity is the caller's concern: mask invalid rows' k2 to INVALID_KEY
+    beforehand and they sort to the tail.  ``payload`` may be any pytree of
+    [N, ...] arrays; every leaf is gathered once through the permutation.
+    """
+    bk = resolve_backend(backend)
+    n = k2.shape[0]
+    if mk is None:
+        mk = jnp.zeros(n, jnp.int32)
+        num_keys = 1
+    if bk == "pallas":
+        from repro.kernels.sort_u32 import sort_lex_pallas
+        lo = mk if num_keys >= 2 else jnp.zeros(n, jnp.int32)
+        k2s, los, perm = sort_lex_pallas(k2, lo, interpret=_interpret())
+        mks = los if num_keys >= 2 else jnp.take(mk, perm, axis=0)
+    else:
+        iota = jnp.arange(n, dtype=jnp.int32)
+        if num_keys <= 1:
+            k2s, perm = jax.lax.sort((k2, iota), num_keys=1, is_stable=True)
+        else:
+            k2s, _, perm = jax.lax.sort((k2, mk, iota), num_keys=2,
+                                        is_stable=True)
+        mks = jnp.take(mk, perm, axis=0)
+    gathered = jax.tree.map(lambda a: jnp.take(a, perm, axis=0), payload)
+    return SortedPairs(k2s, mks, gathered, perm)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce: the Reduce stage
+# ---------------------------------------------------------------------------
+
+def _kind_of(reducer) -> str:
+    kind = getattr(reducer, "kind", reducer)
+    if kind not in ("sum", "min", "max", "mean"):
+        raise ValueError(f"unknown reducer kind {kind!r}")
+    return kind
+
+
+def _identity_scalar(kind: str, dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        info = jnp.finfo(dtype)
+    else:
+        info = jnp.iinfo(dtype)
+    return info.max if kind == "min" else info.min
+
+
+def _mask_leaf(kind: str, leaf: jax.Array, valid: jax.Array) -> jax.Array:
+    mask = valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
+    if kind in ("min", "max"):
+        return jnp.where(mask, leaf, _identity_scalar(kind, leaf.dtype))
+    return jnp.where(mask, leaf, 0).astype(leaf.dtype)
+
+
+def segment_reduce(reducer, segment_ids: jax.Array, values: Any,
+                   valid: jax.Array, num_segments: int,
+                   indices_are_sorted: bool = False,
+                   backend: Optional[str] = None):
+    """Reduce ``values`` into ``num_segments`` groups.
+
+    ``reducer`` is a ``repro.core.kvstore.Reducer`` or a bare kind string.
+    Returns (accumulated values pytree [K, ...], counts [K] int32); mean
+    returns the *sum* (``finalize_reduce`` divides by the counts).  Invalid
+    rows are routed to a scratch segment (index ``num_segments``) so they
+    never pollute real groups.
+    """
+    bk = resolve_backend(backend)
+    kind = _kind_of(reducer)
+    seg = jnp.where(valid, segment_ids, num_segments).astype(jnp.int32)
+
+    if bk == "pallas":
+        return _segment_reduce_pallas(kind, seg, values, valid, num_segments)
+    return _segment_reduce_xla(kind, seg, values, valid, num_segments,
+                               indices_are_sorted)
+
+
+def _segment_reduce_xla(kind, seg, values, valid, num_segments,
+                        indices_are_sorted):
+    op = {"sum": jax.ops.segment_sum, "mean": jax.ops.segment_sum,
+          "min": jax.ops.segment_min, "max": jax.ops.segment_max}[kind]
+
+    def _one(leaf):
+        leaf = _mask_leaf(kind, leaf, valid)
+        out = op(leaf, seg, num_segments=num_segments + 1,
+                 indices_are_sorted=indices_are_sorted)
+        return out[:num_segments]
+
+    acc = jax.tree.map(_one, values)
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), seg,
+                                 num_segments=num_segments + 1,
+                                 indices_are_sorted=indices_are_sorted)
+    return acc, counts[:num_segments]
+
+
+def _segment_reduce_pallas(kind, seg, values, valid, num_segments):
+    from repro.kernels.segment_reduce import (
+        segment_minmax_mxu, segment_sum_mxu,
+    )
+    interp = _interpret()
+
+    def _one(leaf):
+        leaf = _mask_leaf(kind, leaf, valid)
+        flat = leaf.reshape(leaf.shape[0], -1)       # >2-D leaves flatten
+        if kind in ("sum", "mean"):
+            out_dtype = (jnp.int32 if jnp.issubdtype(leaf.dtype, jnp.integer)
+                         else jnp.float32)
+            out = segment_sum_mxu(seg, flat, num_segments + 1,
+                                  out_dtype=out_dtype, interpret=interp)
+            out = out.astype(leaf.dtype)
+        else:
+            out = segment_minmax_mxu(kind, seg, flat, num_segments + 1,
+                                     interpret=interp)
+        out = out[:num_segments]
+        return out.reshape((num_segments,) + leaf.shape[1:])
+
+    acc = jax.tree.map(_one, values)
+    counts = segment_sum_mxu(seg, valid.astype(jnp.int32)[:, None],
+                             num_segments + 1, out_dtype=jnp.int32,
+                             interpret=interp)[:num_segments, 0]
+    return acc, counts

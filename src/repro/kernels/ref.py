@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors one kernel's contract exactly (masking semantics
+included) with straight-line jax.numpy — the ground truth that the kernel
+sweeps in ``tests/test_kernels.py`` and the backend parity tests compare
+against.  No Pallas imports here: the oracles must run anywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.0e38
+
+
+# -- sort -------------------------------------------------------------------
+
+def sort_kv32_ref(keys, payload):
+    order = jnp.argsort(keys, stable=True)
+    return jnp.take(keys, order), jnp.take(payload, order)
+
+
+def sort_lex_ref(hi, lo):
+    """Stable lexicographic (hi, lo) sort; returns (hi, lo, perm)."""
+    n = hi.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    *_, perm = jax.lax.sort((hi, lo, iota), num_keys=2, is_stable=True)
+    return jnp.take(hi, perm), jnp.take(lo, perm), perm
+
+
+# -- segment reduce ---------------------------------------------------------
+
+def segment_reduce_ref(seg: jax.Array, vals: jax.Array,
+                       num_segments: int) -> jax.Array:
+    seg = jnp.where(seg < num_segments, seg, num_segments)
+    out = jax.ops.segment_sum(vals.astype(jnp.float32), seg,
+                              num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+def segment_minmax_ref(kind: str, seg: jax.Array, vals: jax.Array,
+                       num_segments: int) -> jax.Array:
+    """min/max oracle; segments with no rows hold the reduction identity."""
+    op = jax.ops.segment_min if kind == "min" else jax.ops.segment_max
+    seg = jnp.where(seg < num_segments, seg, num_segments)
+    out = op(vals, seg, num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+# -- attention --------------------------------------------------------------
+
+def mha_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Dense oracle with identical masking semantics."""
+    b, h, sq, hd = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    rep = h // kh
+    kx = jnp.repeat(k, rep, axis=1)
+    vx = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / (hd ** 0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# -- spmv -------------------------------------------------------------------
+
+def spmv_ell_ref(nbrs, contrib, num_vertices: int):
+    flat_n = nbrs.reshape(-1)
+    flat_c = contrib.reshape(-1).astype(jnp.float32)
+    seg = jnp.where((flat_n >= 0) & (flat_n < num_vertices), flat_n,
+                    num_vertices)
+    out = jax.ops.segment_sum(jnp.where(seg < num_vertices, flat_c, 0.0),
+                              seg, num_segments=num_vertices + 1)
+    return out[:num_vertices]

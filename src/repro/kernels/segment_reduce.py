@@ -1,4 +1,4 @@
-"""Segment reduction as an MXU one-hot matmul (the Reduce stage on TPU).
+"""Segment reduction on the MXU (the Reduce stage on TPU).
 
 Hadoop's Reduce iterates a key's value list with scalar code; a TPU wants
 matrix units.  For a tile of R rows with segment ids ``seg[R]`` and values
@@ -10,7 +10,19 @@ The grid walks (row tiles x output blocks); each output block stays
 resident in VMEM across the row-tile loop (BlockSpec index_map pins it),
 accumulating partial sums — the classic stationary-output tiling.
 
-ref.py oracle: ``segment_reduce_ref`` (jax.ops.segment_sum).
+Three kernels cover all four ``Reducer`` monoids:
+
+  * ``segment_sum_mxu``    — sum and mean (mean = sum + count, the division
+    happens in ``kvstore.finalize_reduce``); integer values accumulate in
+    int32, floats in float32.
+  * ``segment_minmax_mxu`` — min and max via a masked one-hot select
+    (``where(onehot, vals, identity)`` reduced over the row axis); the MXU
+    cannot min/max-accumulate, so this leg runs on the VPU with the same
+    stationary-output tiling.
+  * ``segment_reduce_mxu`` — the original float32 sum entry point, kept as
+    the benchmark/back-compat surface.
+
+``repro.kernels.ref`` holds the pure-jnp oracles.
 """
 from __future__ import annotations
 
@@ -21,13 +33,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import segment_minmax_ref, segment_reduce_ref  # noqa: F401
+
 DEFAULT_ROWS = 512      # rows per tile
 DEFAULT_KBLK = 512      # output segments per block
+MINMAX_ROWS = 256       # the select kernel materializes [rows, kblk, D]
+MINMAX_KBLK = 128
 
 
-def _kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
+def _sum_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
     i = pl.program_id(0)      # row tile
-    j = pl.program_id(1)      # output block
 
     @pl.when(i == 0)
     def _init():
@@ -35,7 +50,7 @@ def _kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
 
     seg = seg_ref[...]                        # [rows]
     vals = val_ref[...]                       # [rows, D]
-    base = j * kblk
+    base = pl.program_id(1) * kblk
     local = seg - base
     onehot = (local[:, None] ==
               jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
@@ -44,45 +59,123 @@ def _kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
                             preferred_element_type=out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("num_segments", "rows", "kblk",
-                                    "interpret"))
-def segment_reduce_mxu(seg: jax.Array, vals: jax.Array, num_segments: int,
-                       *, rows: int = DEFAULT_ROWS, kblk: int = DEFAULT_KBLK,
-                       interpret: bool = True) -> jax.Array:
-    """seg [N] int32 (invalid rows: any id >= num_segments), vals [N, D].
+def _minmax_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int,
+                   is_min: bool, ident):
+    i = pl.program_id(0)
 
-    Returns [num_segments, D] sums in float32.
-    """
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    seg = seg_ref[...]
+    vals = val_ref[...]
+    base = pl.program_id(1) * kblk
+    local = seg - base
+    onehot = (local[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
+    # masked select: rows outside this output block contribute the identity
+    expanded = jnp.where(onehot[:, :, None], vals[:, None, :],
+                         jnp.asarray(ident, vals.dtype))
+    if is_min:
+        out_ref[...] = jnp.minimum(out_ref[...], expanded.min(axis=0))
+    else:
+        out_ref[...] = jnp.maximum(out_ref[...], expanded.max(axis=0))
+
+
+def _pad_rows(seg, vals, rows, num_segments):
     n, d = vals.shape
     rows = min(rows, n)
     if n % rows != 0:
         pad = rows - n % rows
         seg = jnp.concatenate([seg, jnp.full(pad, num_segments, seg.dtype)])
         vals = jnp.concatenate([vals, jnp.zeros((pad, d), vals.dtype)])
-        n = seg.shape[0]
+    return seg, vals, rows
+
+
+def _kblocks(num_segments, kblk):
     kblk = min(kblk, max(num_segments, 1))
     kpad = (kblk - num_segments % kblk) % kblk
-    kfull = num_segments + kpad
+    return kblk, num_segments + kpad
 
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "out_dtype", "rows",
+                                    "kblk", "interpret"))
+def segment_sum_mxu(seg: jax.Array, vals: jax.Array, num_segments: int, *,
+                    out_dtype=jnp.float32, rows: int = DEFAULT_ROWS,
+                    kblk: int = DEFAULT_KBLK,
+                    interpret: bool = True) -> jax.Array:
+    """seg [N] int32 (invalid rows: any id >= num_segments), vals [N, D].
+
+    Returns [num_segments, D] sums in ``out_dtype``.  Padding rows outside
+    [0, num_segments) may land in the kblk overhang; the slice drops them.
+    """
+    seg, vals, rows = _pad_rows(seg, vals, rows, num_segments)
+    n, d = vals.shape
+    kblk, kfull = _kblocks(num_segments, kblk)
+    if jnp.issubdtype(vals.dtype, jnp.integer):
+        vals = vals.astype(out_dtype)
     out = pl.pallas_call(
-        functools.partial(_kernel, kblk=kblk, rows=rows),
+        functools.partial(_sum_kernel, kblk=kblk, rows=rows),
         grid=(n // rows, kfull // kblk),
         in_specs=[
             pl.BlockSpec((rows,), lambda i, j: (i,)),
             pl.BlockSpec((rows, d), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((kblk, d), lambda i, j: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((kfull, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((kfull, d), out_dtype),
         interpret=interpret,
     )(seg.astype(jnp.int32), vals)
     return out[:num_segments]
 
 
-def segment_reduce_ref(seg: jax.Array, vals: jax.Array,
-                       num_segments: int) -> jax.Array:
-    """Pure-jnp oracle."""
-    seg = jnp.where(seg < num_segments, seg, num_segments)
-    out = jax.ops.segment_sum(vals.astype(jnp.float32), seg,
-                              num_segments=num_segments + 1)
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "num_segments", "rows", "kblk",
+                                    "interpret"))
+def segment_minmax_mxu(kind: str, seg: jax.Array, vals: jax.Array,
+                       num_segments: int, *, rows: int = MINMAX_ROWS,
+                       kblk: int = MINMAX_KBLK,
+                       interpret: bool = True) -> jax.Array:
+    """Segment min/max; empty segments hold the reduction identity."""
+    assert kind in ("min", "max"), kind
+    if jnp.issubdtype(vals.dtype, jnp.floating):
+        # XLA's segment_min/max identity for empty float segments is ±inf
+        ident = float("inf") if kind == "min" else float("-inf")
+    else:
+        info = jnp.iinfo(vals.dtype)
+        ident = info.max if kind == "min" else info.min
+    n0 = vals.shape[0]
+    # pad rows with the identity (not zero) so padding never wins
+    rows = min(rows, n0)
+    if n0 % rows != 0:
+        pad = rows - n0 % rows
+        seg = jnp.concatenate([seg, jnp.full(pad, num_segments, seg.dtype)])
+        vals = jnp.concatenate(
+            [vals, jnp.full((pad, vals.shape[1]), ident, vals.dtype)])
+    n, d = vals.shape
+    kblk, kfull = _kblocks(num_segments, kblk)
+    out = pl.pallas_call(
+        functools.partial(_minmax_kernel, kblk=kblk, rows=rows,
+                          is_min=(kind == "min"), ident=ident),
+        grid=(n // rows, kfull // kblk),
+        in_specs=[
+            pl.BlockSpec((rows,), lambda i, j: (i,)),
+            pl.BlockSpec((rows, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((kblk, d), lambda i, j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((kfull, d), vals.dtype),
+        interpret=interpret,
+    )(seg.astype(jnp.int32), vals)
     return out[:num_segments]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "rows", "kblk",
+                                    "interpret"))
+def segment_reduce_mxu(seg: jax.Array, vals: jax.Array, num_segments: int,
+                       *, rows: int = DEFAULT_ROWS, kblk: int = DEFAULT_KBLK,
+                       interpret: bool = True) -> jax.Array:
+    """Original float32-sum entry point (benchmarks, back-compat)."""
+    return segment_sum_mxu(seg, vals.astype(jnp.float32), num_segments,
+                           out_dtype=jnp.float32, rows=rows, kblk=kblk,
+                           interpret=interpret)

@@ -1,4 +1,4 @@
-"""In-VMEM bitonic sort of (key, payload) pairs — the shuffle-sort on TPU.
+"""In-VMEM bitonic sort of key/payload lanes — the shuffle-sort on TPU.
 
 Hadoop's shuffle sorts spill files with comparison mergesort on the CPU;
 the TPU analogue is a data-parallel bitonic network over a VMEM-resident
@@ -7,9 +7,17 @@ tile and its stride-permuted self (no data-dependent control flow, VPU
 friendly).  Larger inputs are handled by the host-side run-merge in
 MRBG-Store (this kernel is the per-tile building block).
 
-Payload rides along as a second lane (values permuted with the keys).
+The network sorts three int lanes lexicographically: a primary key, a
+secondary key, and the original row index.  Because the index lane is
+unique, the comparison is a total order — which makes the (otherwise
+unstable) bitonic network *stable* with respect to (primary, secondary)
+and lets the index lane double as the output permutation.  The engine's
+merge path (``incremental._merge_reduce``) depends on exactly this
+stability for its last-writer-wins semantics, and arbitrary pytree
+payloads are gathered once through the permutation instead of riding
+through every compare-exchange stage.
 
-ref.py oracle: ``sort_kv32_ref`` (jnp.argsort gather).
+``repro.kernels.ref`` holds the pure-jnp oracles.
 """
 from __future__ import annotations
 
@@ -20,68 +28,94 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-
-def _stage(keys, payload, j, k):
-    n = keys.shape[0]
-    idx = jax.lax.iota(jnp.int32, n)
-    partner = jnp.bitwise_xor(idx, j)
-    pk = keys[partner]
-    pp = payload[partner]
-    up = (jnp.bitwise_and(idx, k) == 0)          # ascending region?
-    is_lo = idx < partner
-    keep = jnp.where(up == is_lo, jnp.minimum(keys, pk),
-                     jnp.maximum(keys, pk))
-    # equal keys: min == max == own key, so both sides keep their own
-    # payload — a valid (if unstable) permutation
-    take_self = keep == keys
-    newp = jnp.where(take_self, payload, pp)
-    return keep, newp
+from repro.kernels.ref import sort_kv32_ref  # noqa: F401  (back-compat)
 
 
-def _kernel(k_ref, p_ref, ko_ref, po_ref, *, length: int):
-    keys = k_ref[...]
-    payload = p_ref[...]
+def _lex_lt(ah, al, ai, bh, bl, bi):
+    """(ah, al, ai) < (bh, bl, bi) lexicographically."""
+    return jnp.where(ah != bh, ah < bh, jnp.where(al != bl, al < bl, ai < bi))
+
+
+def _stage(hi, lo, idx, j, k):
+    n = hi.shape[0]
+    pos = jax.lax.iota(jnp.int32, n)
+    partner = jnp.bitwise_xor(pos, j)
+    ph = hi[partner]
+    plo = lo[partner]
+    pi = idx[partner]
+    up = (jnp.bitwise_and(pos, k) == 0)          # ascending region?
+    is_lo = pos < partner
+    want_min = up == is_lo
+    own_lt = _lex_lt(hi, lo, idx, ph, plo, pi)   # never equal: idx is unique
+    take_own = jnp.where(want_min, own_lt, ~own_lt)
+    sel = lambda a, b: jnp.where(take_own, a, b)
+    return sel(hi, ph), sel(lo, plo), sel(idx, pi)
+
+
+def _kernel(hi_ref, lo_ref, idx_ref, ho_ref, lo_out_ref, po_ref, *,
+            length: int):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    idx = idx_ref[...]
     k = 2
     while k <= length:
         j = k // 2
         while j >= 1:
-            keys, payload = _stage(keys, payload, j, k)
+            hi, lo, idx = _stage(hi, lo, idx, j, k)
             j //= 2
         k *= 2
-    ko_ref[...] = keys
-    po_ref[...] = payload
+    ho_ref[...] = hi
+    lo_out_ref[...] = lo
+    po_ref[...] = idx
+
+
+def _type_max(dtype):
+    return jnp.iinfo(dtype).max
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_lex_pallas(hi: jax.Array, lo: jax.Array, *, interpret: bool = True):
+    """Stable lexicographic sort by (hi, lo); ties broken by row index.
+
+    Returns ``(hi_sorted, lo_sorted, perm)`` where ``perm`` is the int32
+    permutation (``hi_sorted == hi[perm]``).  Length is padded to the next
+    power of two with both key lanes at their dtype max, so padding lands
+    at the tail and ``perm[:n]`` is a permutation of ``range(n)``.
+    """
+    n = hi.shape[0]
+    m = 1
+    while m < max(n, 1):
+        m *= 2
+    iota = jnp.arange(m, dtype=jnp.int32)
+    if m != n:
+        hi = jnp.concatenate([hi, jnp.full(m - n, _type_max(hi.dtype),
+                                           hi.dtype)])
+        lo = jnp.concatenate([lo, jnp.full(m - n, _type_max(lo.dtype),
+                                           lo.dtype)])
+    ho, lo_out, perm = pl.pallas_call(
+        functools.partial(_kernel, length=m),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m,), lambda i: (0,)),
+                  pl.BlockSpec((m,), lambda i: (0,)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((m,), lambda i: (0,)),
+                   pl.BlockSpec((m,), lambda i: (0,)),
+                   pl.BlockSpec((m,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), hi.dtype),
+                   jax.ShapeDtypeStruct((m,), lo.dtype),
+                   jax.ShapeDtypeStruct((m,), jnp.int32)],
+        interpret=interpret,
+    )(hi, lo, iota)
+    return ho[:n], lo_out[:n], perm[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sort_kv32(keys: jax.Array, payload: jax.Array, *,
               interpret: bool = True):
-    """Sort uint32/int32 ``keys`` ascending, permuting int32 ``payload``.
+    """Sort uint32/int32 ``keys`` ascending (stable), permuting ``payload``.
 
-    Length is padded to the next power of two with key = max_uint32.
+    Back-compat single-key entry point over the lexicographic network.
     """
-    n = keys.shape[0]
-    m = 1
-    while m < n:
-        m *= 2
-    if m != n:
-        keys = jnp.concatenate(
-            [keys, jnp.full(m - n, jnp.iinfo(jnp.uint32).max, keys.dtype)])
-        payload = jnp.concatenate(
-            [payload, jnp.zeros(m - n, payload.dtype)])
-    ko, po = pl.pallas_call(
-        functools.partial(_kernel, length=m),
-        grid=(1,),
-        in_specs=[pl.BlockSpec((m,), lambda i: (0,)),
-                  pl.BlockSpec((m,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((m,), lambda i: (0,)),
-                   pl.BlockSpec((m,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((m,), keys.dtype),
-                   jax.ShapeDtypeStruct((m,), payload.dtype)],
-        interpret=interpret,
-    )(keys, payload)
-    return ko[:n], po[:n]
-
-
-def sort_kv32_ref(keys, payload):
-    order = jnp.argsort(keys, stable=True)
-    return jnp.take(keys, order), jnp.take(payload, order)
+    ko, _, perm = sort_lex_pallas(keys, jnp.zeros_like(keys, jnp.int32),
+                                  interpret=interpret)
+    return ko, jnp.take(payload, perm, axis=0)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import spmv_ell_ref  # noqa: F401  (back-compat)
+
 DEFAULT_ROWS = 256
 DEFAULT_KBLK = 1024
 
@@ -77,13 +79,3 @@ def spmv_ell(nbrs: jax.Array, contrib: jax.Array, num_vertices: int, *,
         interpret=interpret,
     )(nbrs.astype(jnp.int32), contrib.astype(jnp.float32))
     return y[:num_vertices]
-
-
-def spmv_ell_ref(nbrs, contrib, num_vertices: int):
-    flat_n = nbrs.reshape(-1)
-    flat_c = contrib.reshape(-1).astype(jnp.float32)
-    seg = jnp.where((flat_n >= 0) & (flat_n < num_vertices), flat_n,
-                    num_vertices)
-    out = jax.ops.segment_sum(jnp.where(seg < num_vertices, flat_c, 0.0),
-                              seg, num_segments=num_vertices + 1)
-    return out[:num_vertices]

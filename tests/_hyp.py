@@ -1,0 +1,142 @@
+"""Property-testing shim: real hypothesis when installed, seeded fallback
+otherwise.
+
+The container this repo grows in does not ship ``hypothesis`` (and new deps
+cannot be installed), so the property tests import ``given``/``settings``/
+``st`` from here.  When hypothesis is available (CI installs it via the
+``test`` extra in pyproject.toml) it is used unchanged — shrinking, edge-case
+bias and all.  Otherwise a miniature deterministic sampler provides the same
+decorator API: each test runs ``max_examples`` times over examples drawn from
+a per-test seeded RNG, with the boundary values pinned as the first examples.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def draw(self, rng):
+            raise NotImplementedError
+
+        def boundary(self):
+            """Deterministic edge-case examples tried before random draws."""
+            return []
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+        def boundary(self):
+            vals = {self.lo, self.hi, min(max(0, self.lo), self.hi),
+                    min(max(1, self.lo), self.hi)}
+            return sorted(vals)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size, self.max_size = int(min_size), int(max_size)
+
+        def draw(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.draw(rng) for _ in range(n)]
+
+        def boundary(self):
+            out = []
+            rng = np.random.default_rng(0)
+            for size in {self.min_size, self.max_size}:
+                out.append([self.elements.draw(rng) for _ in range(size)])
+            return out
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng):
+            return self.options[int(rng.integers(0, len(self.options)))]
+
+        def boundary(self):
+            return self.options[:2]
+
+    class _Booleans(_SampledFrom):
+        def __init__(self):
+            super().__init__([False, True])
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            return _Lists(elements, min_size, max_size)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+    st = _St()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_hyp_max_examples", 20)
+
+            import inspect
+            sig = inspect.signature(fn)
+            all_params = list(sig.parameters.values())
+            bound_names = [p.name for p in all_params[-len(strategies):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):  # noqa: ANN001
+                return _run_examples(fn, strategies, max_examples,
+                                     bound_names, args, kw)
+
+            # hide the strategy-bound trailing params from pytest, which
+            # would otherwise look for fixtures named after them
+            wrapper.__signature__ = sig.replace(
+                parameters=all_params[:-len(strategies)])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def _run_examples(fn, strategies, max_examples, bound_names, args, kw):
+        seed = zlib.crc32(fn.__qualname__.encode())
+        rng = np.random.default_rng(seed)
+        # boundary examples first (zip pads shorter lists with random draws)
+        bounds = [s.boundary() for s in strategies]
+        n_bound = min(max(map(len, bounds)), max_examples)
+        examples = []
+        for i in range(n_bound):
+            examples.append(tuple(
+                b[i] if i < len(b) else s.draw(rng)
+                for s, b in zip(strategies, bounds)))
+        while len(examples) < max_examples:
+            examples.append(tuple(s.draw(rng) for s in strategies))
+        for ex in examples:
+            try:
+                fn(*args, **kw, **dict(zip(bound_names, ex)))
+            except Exception as e:
+                raise AssertionError(
+                    f"{fn.__qualname__} failed on example {ex!r}: {e}"
+                ) from e

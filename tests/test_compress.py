@@ -7,7 +7,7 @@ import sys
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.optim.compress import (dequantize_int8, init_error_buffers,
                                   quantize_int8, wire_bytes)

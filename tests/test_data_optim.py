@@ -2,7 +2,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.data import DeltaStream, LMDataConfig, lm_batch_at_step, \
     synthetic_tokens

@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core.kvstore import (
     Edges, compact_edges, make_edges, next_bucket, segment_reduce,

@@ -2,7 +2,7 @@
 multi-batch retrieval, compaction, I/O accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core.mrbg_store import MRBGStore, POLICIES
 
