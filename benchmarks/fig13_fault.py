@@ -1,43 +1,43 @@
 """Fig. 13: failure injection + recovery.  A worker failure mid-refresh is
-recovered from the per-iteration checkpoint; recovery cost is a small
-constant (paper: ~12 s on EC2), not a job restart."""
+recovered from the Session checkpoint; recovery cost is a small constant
+(paper: ~12 s on EC2), not a job restart."""
 from __future__ import annotations
 
+import shutil
 import time
 
 from benchmarks.common import emit, graph_update_delta, pagerank_workload
-from repro.core.ft import checkpoint_job, restore_job
-from repro.core.incr_iter import IncrIterJob
+from repro.api import RunConfig, Session
 
 
 def run():
     spec, struct, nbrs = pagerank_workload(s=8192, f=4)
-    job = IncrIterJob(spec, struct, value_bytes=8)
-    job.initial_converge(max_iters=100, tol=1e-6)
+    cfg = RunConfig(max_iters=100, tol=1e-6, refresh_max_iters=30,
+                    cpc_threshold=0.01, value_bytes=8)
+    shutil.rmtree("/tmp/repro_fig13", ignore_errors=True)
+    session = Session(spec, cfg)
+    session.run(struct)
     delta, _ = graph_update_delta(nbrs, 0.10)
 
-    # uninterrupted refresh
-    import copy
     t0 = time.perf_counter()
-    ck = checkpoint_job(job, "/tmp/repro_fig13", 0)
+    session.checkpoint("/tmp/repro_fig13")
     t_ckpt = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    st, _ = job.refresh(delta, max_iters=30, tol=1e-6, cpc_threshold=0.01)
+    session.update(delta)
     t_refresh = time.perf_counter() - t0
 
-    # failure: job object dies; restore + rerun refresh
+    # failure: the session object dies; restore + rerun the refresh
     t0 = time.perf_counter()
-    job2 = restore_job(spec, "/tmp/repro_fig13")
+    session2 = Session.restore(spec, "/tmp/repro_fig13", cfg)
     t_restore = time.perf_counter() - t0
     t0 = time.perf_counter()
-    st2, _ = job2.refresh(delta, max_iters=30, tol=1e-6, cpc_threshold=0.01)
+    session2.update(delta)
     t_recover = time.perf_counter() - t0
 
     import numpy as np
-    drift = float(np.abs(np.asarray(st.values["r"]) -
-                         np.asarray(st2.values["r"])).max())
-    emit("fig13.checkpoint_s", t_ckpt * 1e6, "per-iteration MRBG+state")
+    drift = float(np.abs(session.result["r"] - session2.result["r"]).max())
+    emit("fig13.checkpoint_s", t_ckpt * 1e6, "per-epoch MRBG+state")
     emit("fig13.restore_s", t_restore * 1e6,
          f"vs refresh {t_refresh*1e6:.0f}us")
     emit("fig13.recovered_refresh_s", t_recover * 1e6,

@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, graph_update_delta, timed
+from benchmarks.common import emit, graph_update_delta, timed, whitebox
 from repro.core.incr_iter import IncrIterJob
 from repro.core.incremental import make_delta
 from repro.core.iterative import State, run_iterative, run_plain
@@ -58,6 +58,7 @@ def _bench(name, spec, struct_fn, delta_fn, tol, cpc, value_bytes=8):
          f"work_saving={work_plain/max(work_i2,1):.1f}x,mode={mode}")
 
 
+@whitebox
 def run():
     # ---- PageRank (one-to-one) ----
     from repro.apps import pagerank as pr
@@ -82,8 +83,8 @@ def run():
         nb[0::2] = nbrs2[rows]
         nb[1::2] = new_rows
         wb = np.repeat(w[rows], 2, axis=0)
-        return make_delta(dk, dk, {"nbrs": jnp.asarray(nb),
-                                   "w": jnp.asarray(wb)}, sg)
+        return make_delta(dk, {"nbrs": jnp.asarray(nb),
+                               "w": jnp.asarray(wb)}, sg)
 
     _bench("sssp", sssp.make_spec(4096),
            lambda: sssp.make_struct(nbrs2, w, src=0), sssp_delta,
@@ -108,7 +109,7 @@ def run():
         buf = np.empty((2 * rows.size, dim), np.float32)
         buf[0::2] = pts[rows]
         buf[1::2] = new_p
-        return make_delta(dk, dk, {"p": jnp.asarray(buf)}, sg)
+        return make_delta(dk, {"p": jnp.asarray(buf)}, sg)
 
     _bench("kmeans", kmeans.make_spec(kcl, dim, init),
            lambda: kmeans.make_struct(pts), kmeans_delta, tol=1e-5, cpc=0.0,
@@ -128,7 +129,7 @@ def run():
         mb = np.empty((2 * rids.size, bs, bs), np.float32)
         mb[0::2] = blocks[rids]
         mb[1::2] = newb
-        return make_delta(dk, dk, {"m": jnp.asarray(mb)}, sg)
+        return make_delta(dk, {"m": jnp.asarray(mb)}, sg)
 
     _bench("gimv", gimv.make_spec(nb_, bs, bvec),
            lambda: gimv.make_struct(blocks, nb_), gimv_delta, tol=1e-8,

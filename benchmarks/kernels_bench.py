@@ -104,18 +104,19 @@ def _bench_ops(backend: str, results: dict) -> None:
 
 
 def _bench_incremental_onestep(backend: str, results: dict) -> None:
-    """End-to-end one-step refresh (wordcount, paper Section 3.3)."""
+    """End-to-end one-step refresh (wordcount, paper Section 3.3) through
+    the repro.api Session façade."""
+    from repro.api import RunConfig, Session, make_delta
     from repro.apps import wordcount as wc
-    from repro.core.incremental import IncrementalJob, make_delta
 
     rng = np.random.default_rng(7)
     n_docs, vocab, length = 512, 256, 16
     docs = rng.integers(0, vocab, size=(n_docs, length)).astype(np.int32)
-    spec = wc.make_spec(vocab)
-    job = IncrementalJob(spec, value_bytes=4, backend=backend)
+    spec, data = wc.make_job(docs, vocab)
+    session = Session(spec, RunConfig(onestep_path="mrbg", value_bytes=4,
+                                      backend=backend))
 
-    _, dt = timed(lambda: job.initial_run(
-        wc.make_input(np.arange(n_docs), docs)))
+    _, dt = timed(lambda: session.run(data))
     emit(f"incremental_onestep.initial.{backend}_s", dt * 1e6)
     results["initial_us"] = dt * 1e6
 
@@ -127,10 +128,10 @@ def _bench_incremental_onestep(backend: str, results: dict) -> None:
         buf = np.empty((2, length), docs.dtype)
         buf[0::2] = docs[[row]]
         buf[1::2] = new
-        return make_delta(dk, dk, {"w": jnp.asarray(buf)}, sg)
+        return make_delta(dk, {"w": jnp.asarray(buf)}, sg)
 
-    job.incremental_run(delta_for(3, 1))     # compile the delta path
-    _, dt = timed(lambda: job.incremental_run(delta_for(5, 2)), repeat=3)
+    session.update(delta_for(3, 1))          # compile the delta path
+    _, dt = timed(lambda: session.update(delta_for(5, 2)), repeat=3)
     emit(f"incremental_onestep.refresh.{backend}_s", dt * 1e6)
     results["refresh_us"] = dt * 1e6
 

@@ -1,15 +1,15 @@
 """§8.2 one-step APriori: recompute vs accumulator-incremental on a weekly
-delta (paper: 7.9% of the corpus, 12x speedup)."""
+delta (paper: 7.9% of the corpus, 12x speedup), driven through repro.api."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.api import RunConfig, Session, make_delta
 from repro.apps import apriori
-from repro.core.accumulator import AccumulatorJob
+from repro.core.deprecation import internal_use
 from repro.core.engine import run_onestep
-from repro.core.incremental import make_delta
 
 
 def run():
@@ -18,29 +18,30 @@ def run():
     tweets = rng.integers(0, V, (N, L)).astype(np.int32)
     tweets[rng.random((N, L)) < 0.2] = -1
     pairs = apriori.candidate_pairs(tweets[:20000], V, top=64)
-    spec = apriori.make_spec(pairs)
+    spec, inp0 = apriori.make_job(tweets, pairs)
 
-    job = AccumulatorJob(spec)
-    job.initial_run(apriori.make_input(np.arange(N), tweets))
+    session = Session(spec, RunConfig(onestep_path="accumulator"))
+    session.run(inp0)
 
     dn = int(N * 0.079)
     new = rng.integers(0, V, (dn, L)).astype(np.int32)
     new[rng.random((dn, L)) < 0.2] = -1
     ids = np.arange(N, N + dn, dtype=np.int32)
-    delta = make_delta(ids, ids, {"w": jnp.asarray(new)},
-                       np.ones(dn, np.int8))
+    delta = make_delta(ids, {"w": jnp.asarray(new)}, np.ones(dn, np.int8))
 
     # warm both paths
-    job.incremental_run(delta)
+    session.update(delta)
     all_tweets = np.concatenate([tweets, new])
     inp = apriori.make_input(np.arange(N + dn), all_tweets)
-    run_onestep(spec, inp)
+    with internal_use():                 # raw recompute baseline (whitebox)
+        run_onestep(spec, inp)
+        _, t_recomp = timed(lambda: run_onestep(spec, inp)
+                            .results.values["c"].block_until_ready(),
+                            repeat=3)
 
-    _, t_recomp = timed(lambda: run_onestep(spec, inp)
-                        .results.values["c"].block_until_ready(), repeat=3)
-    job2 = AccumulatorJob(spec)
-    job2.initial_run(apriori.make_input(np.arange(N), tweets))
-    _, t_incr = timed(lambda: job2.incremental_run(delta))
+    session2 = Session(spec, RunConfig(onestep_path="accumulator"))
+    session2.run(inp0)
+    _, t_incr = timed(lambda: session2.update(delta))
     emit("apriori.recompute_s", t_recomp * 1e6, f"tweets={N+dn}")
     emit("apriori.incremental_s", t_incr * 1e6,
          f"speedup={t_recomp / t_incr:.1f}x,map_work_saving={(N+dn)/dn:.1f}x"

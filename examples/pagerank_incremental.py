@@ -1,29 +1,44 @@
 """End-to-end incremental PageRank over an evolving graph (the paper's
-flagship workload).
+flagship workload), driven entirely through the `repro.api` Session.
 
-    PYTHONPATH=src python examples/pagerank_incremental.py
+    PYTHONPATH=src python examples/pagerank_incremental.py [--vertices 4096]
 
-A web graph evolves over 3 epochs; each refresh job starts from the prior
-converged state + preserved MRBGraph, re-computes only affected vertices
-(with change-propagation control), and checkpoints per epoch for fault
-tolerance.  Compares every refresh against from-scratch recomputation.
+A web graph evolves over several epochs; each `update` starts from the
+prior converged state + preserved MRBGraph, re-computes only affected
+vertices (with change-propagation control), and auto-checkpoints per epoch.
+Every refresh is compared against from-scratch recomputation, and the last
+epoch is replayed from a restored session to prove fault recovery.
 """
+import argparse
+import shutil
+
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import RunConfig, Session, make_delta
 from repro.apps import pagerank as pr
-from repro.core.ft import checkpoint_job, restore_job
-from repro.core.incr_iter import IncrIterJob
-from repro.core.incremental import make_delta
 from repro.data import DeltaStream
 
-S, F = 4096, 4
-nbrs = pr.random_graph(S, F, seed=1, p_edge=0.5)
-spec = pr.make_spec(S)
+ap = argparse.ArgumentParser()
+ap.add_argument("--vertices", type=int, default=4096)
+ap.add_argument("--epochs", type=int, default=3)
+ap.add_argument("--backend", default=None, choices=(None, "xla", "pallas"))
+ap.add_argument("--ckpt-dir", default="/tmp/pr_session_ckpts")
+args = ap.parse_args()
 
-job = IncrIterJob(spec, pr.make_struct(nbrs), value_bytes=8)
-st, hist = job.initial_converge(max_iters=150, tol=1e-7)
-print(f"job A_0 converged in {hist['iters']} iterations")
+S, F = args.vertices, 4
+nbrs = pr.random_graph(S, F, seed=1, p_edge=0.5)
+shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+spec, struct = pr.make_job(nbrs)
+config = RunConfig(max_iters=150, tol=1e-7, refresh_max_iters=80,
+                   cpc_threshold=0.01, value_bytes=8, backend=args.backend,
+                   checkpoint_dir=args.ckpt_dir, checkpoint_every=1)
+session = Session(spec, config)
+
+report = session.run(struct)
+print(f"job A_0 converged in {report.iters} iterations "
+      f"(auto-checkpointed -> {args.ckpt_dir})")
 
 stream = DeltaStream({"nbrs": nbrs}, frac=0.02, seed=7,
                      mutator=lambda rng, rows, old: {
@@ -32,28 +47,28 @@ stream = DeltaStream({"nbrs": nbrs}, frac=0.02, seed=7,
                                                        old["nbrs"].shape),
                                           -1).astype(np.int32)})
 
-for epoch in range(1, 4):
+delta = None
+for epoch in range(1, args.epochs + 1):
     rid, vals, sign = stream.delta()
-    delta = make_delta(rid, rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
-    st, h = job.refresh(delta, max_iters=80, tol=1e-7, cpc_threshold=0.01)
-    affected = [l.n_affected_dks for l in h["logs"]]
-    print(f"job A_{epoch}: mode={h['mode']} iters={h['iters']} "
+    delta = make_delta(rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
+    report = session.update(delta)
+    affected = [l.n_affected_dks for l in report.logs]
+    print(f"job A_{epoch}: mode={report.mode} iters={report.iters} "
           f"affected/iter={affected[:8]}{'...' if len(affected) > 8 else ''}")
 
     want = pr.oracle(stream.values["nbrs"], iters=300)
-    got = np.asarray(st.values["r"])
+    got = session.result["r"]
     rel = (np.abs(got - want) / np.maximum(want, 1e-9)).mean()
     print(f"         mean rel err vs recompute: {rel:.2e}")
 
-    ck = checkpoint_job(job, "/tmp/pr_ckpts", epoch)
-    print(f"         checkpointed -> {ck}")
-
-# fault recovery: lose the job object, restore, keep refreshing
-job = restore_job(spec, "/tmp/pr_ckpts")
+# fault recovery: lose the session, restore the auto-checkpoint of the
+# previous epoch, replay the last delta — same converged answer
+restored = Session.restore(spec, args.ckpt_dir, config)
+print(f"restored session at epoch {restored.epoch}")
 rid, vals, sign = stream.delta()
-delta = make_delta(rid, rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
-st, h = job.refresh(delta, max_iters=80, tol=1e-7, cpc_threshold=0.01)
+delta = make_delta(rid, {"nbrs": jnp.asarray(vals["nbrs"])}, sign)
+report = restored.update(delta)
 want = pr.oracle(stream.values["nbrs"], iters=300)
-rel = (np.abs(np.asarray(st.values["r"]) - want) /
-       np.maximum(want, 1e-9)).mean()
-print(f"post-recovery refresh: mode={h['mode']} mean rel err {rel:.2e} ✓")
+rel = (np.abs(restored.result["r"] - want) / np.maximum(want, 1e-9)).mean()
+print(f"post-recovery refresh: mode={report.mode} "
+      f"mean rel err {rel:.2e} ✓")

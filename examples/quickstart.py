@@ -1,41 +1,50 @@
-"""Quickstart: incremental WordCount in ~40 lines.
+"""Quickstart: incremental WordCount through the `repro.api` Session.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--docs 500]
 
-Runs a MapReduce WordCount, preserves the fine-grain MRBGraph, applies a
-signed delta (delete one doc, edit another, add two), and refreshes the
-counts incrementally — work proportional to the delta, not the corpus.
+Declare the job once, `run` it, then `update` with a signed delta
+(delete one doc, edit another, add two) — the engine refreshes the counts
+with work proportional to the delta, not the corpus, and the same Session
+surface would drive iterative, incremental-iterative, or distributed jobs.
 """
+import argparse
+
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import RunConfig, Session, make_delta
 from repro.apps import wordcount as wc
-from repro.core.incremental import IncrementalJob, make_delta
 
-VOCAB, L = 100, 12
+ap = argparse.ArgumentParser()
+ap.add_argument("--docs", type=int, default=500)
+ap.add_argument("--backend", default=None, choices=(None, "xla", "pallas"))
+args = ap.parse_args()
+
+VOCAB, L, N = 100, 12, args.docs
 rng = np.random.default_rng(0)
-docs = rng.integers(0, VOCAB, size=(500, L)).astype(np.int32)
+docs = rng.integers(0, VOCAB, size=(N, L)).astype(np.int32)
 
-# ---- initial job: map -> shuffle -> reduce, preserving the MRBGraph ----
-job = IncrementalJob(wc.make_spec(VOCAB), value_bytes=4)
-view = job.initial_run(wc.make_input(np.arange(500), docs))
-print("initial top word:", int(np.argmax(view.as_dict()["c"])))
+# ---- declare once; run the initial map -> shuffle -> reduce ----
+spec, data = wc.make_job(docs, VOCAB)
+session = Session(spec, RunConfig(onestep_path="mrbg", value_bytes=4,
+                                  backend=args.backend))
+session.run(data)
+print("initial top word:", int(np.argmax(session.result["c"])))
 
 # ---- delta: '-' deletes, '-'+'+' updates, '+' inserts ----
 edit = rng.integers(0, VOCAB, (1, L)).astype(np.int32)
 new = rng.integers(0, VOCAB, (2, L)).astype(np.int32)
-rid = np.array([7, 42, 42, 500, 501], np.int32)
+rid = np.array([7, 42, 42, N, N + 1], np.int32)
 sign = np.array([-1, -1, 1, 1, 1], np.int8)
 vals = np.concatenate([docs[[7]], docs[[42]], edit, new])
-job.incremental_run(make_delta(rid, rid, {"w": jnp.asarray(vals)}, sign))
+report = session.update(make_delta(rid, {"w": jnp.asarray(vals)}, sign))
 
 # ---- verify against recomputation ----
 docs2 = docs.copy()
 docs2[42] = edit[0]
-valid = np.ones(502, bool)
+valid = np.ones(N + 2, bool)
 valid[7] = False
 want = wc.oracle(np.concatenate([docs2, new]), VOCAB, valid)
-got = job.view.as_dict()["c"]
-assert np.allclose(got, want)
+assert np.allclose(session.result["c"], want)
 print("incremental refresh == recompute ✓")
-print("MRBG-Store:", job.refresh_stats())
+print(report.summary())

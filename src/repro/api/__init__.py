@@ -1,0 +1,41 @@
+"""repro.api — the single supported way to drive the i2MapReduce engine.
+
+    from repro.api import Session, RunConfig
+    from repro.apps import wordcount as wc
+
+    spec, data = wc.make_job(docs, vocab=60)
+    session = Session(spec, RunConfig(backend="xla"))
+    session.run(data)                       # full one-step / converge
+    session.update(make_delta(rid, vals, sign))   # |Δ|-proportional refresh
+    session.result                          # dense host output
+    session.report()                        # uniform RunReport
+    session.checkpoint("/tmp/ck")           # §6 fault tolerance
+    Session.restore(spec, "/tmp/ck")
+
+One ``Session`` drives all four paper modes — one-step, incremental
+one-step, plain/iterative, incremental iterative — plus distributed
+execution via ``RunConfig(mesh=...)``; the engine picks the refresh path
+(fine-grain MRBGraph merge, accumulator fast path, CPC-filtered delta
+propagation, or auto MRBG-off fallback recomputation) internally.
+"""
+from repro.api.config import RunConfig
+from repro.api.report import MODES, RunReport
+from repro.api.session import Session
+
+# the declaration vocabulary, re-exported so callers need only repro.api
+from repro.core.engine import JobSpec, emit_multi, emit_single
+from repro.core.incremental import DeltaKV, make_delta
+from repro.core.iterative import IterSpec, State, default_difference
+from repro.core.kvstore import (
+    KV, Edges, Reducer, make_edges, make_kv, max_reducer, mean_reducer,
+    min_reducer, sum_reducer,
+)
+
+__all__ = [
+    "Session", "RunConfig", "RunReport", "MODES",
+    "JobSpec", "IterSpec", "State", "default_difference",
+    "DeltaKV", "make_delta",
+    "KV", "Edges", "Reducer", "make_kv", "make_edges",
+    "sum_reducer", "min_reducer", "max_reducer", "mean_reducer",
+    "emit_single", "emit_multi",
+]

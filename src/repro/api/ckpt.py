@@ -1,0 +1,214 @@
+"""Session checkpoint/restore: one fault-tolerance surface for every mode.
+
+Folds ``repro.core.ft`` (which snapshots the incremental-iterative engine)
+into the Session API and extends the same discipline to the one-step MRBG
+path, the accumulator path, the plainMR baseline, and distributed sessions:
+
+  <root>/session.json          what kind of driver the snapshot belongs to
+  <root>/it_NNNNNN/            incr-iter epochs (repro.core.ft layout)
+  <root>/ep_NNNNNN/            every other driver's epochs (atomic rename)
+
+``Session.restore`` rebuilds the newest epoch; the next ``update(delta)``
+continues exactly where the snapshot left off.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import RunConfig
+from repro.core.deprecation import internal_use
+from repro.core.incremental import ResultView
+from repro.core.iterative import State
+from repro.core.mrbg_store import (
+    MRBGStore, load_store_state, store_blobs, store_meta,
+)
+
+
+# ---------------------------------------------------------------------------
+# MRBG-Store blobs (one layout, shared with repro.core.ft via
+# repro.core.mrbg_store.{store_blobs,store_meta,load_store_state})
+# ---------------------------------------------------------------------------
+
+def _store_to_npz(store: MRBGStore, path: Path) -> Dict:
+    np.savez(path, **store_blobs(store))
+    return store_meta(store)
+
+
+def _store_from_npz(num_keys: int, path: Path, meta: Dict,
+                    cfg: RunConfig) -> MRBGStore:
+    store = MRBGStore(num_keys, meta["value_bytes"], policy=meta["policy"],
+                      **cfg.store_kw())
+    load_store_state(store, np.load(path), meta)
+    return store
+
+
+def _atomic_epoch_dir(root: Path, epoch: int):
+    tmp = root / f"ep_{epoch:06d}.tmp"
+    final = root / f"ep_{epoch:06d}"
+    old = root / f"ep_{epoch:06d}.old"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    if old.exists():
+        shutil.rmtree(old)
+    tmp.mkdir(parents=True)
+
+    def commit() -> Path:
+        # never leave a window with no snapshot for this epoch: displace
+        # the previous version, promote the new one, then drop the old
+        if final.exists():
+            os.rename(final, old)
+        os.rename(tmp, final)
+        if old.exists():
+            shutil.rmtree(old)
+        return final
+
+    return tmp, commit
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_text(text)
+    os.replace(tmp, path)
+
+
+def _latest_valid(root: Path, pattern: str) -> list:
+    """Committed snapshot dirs only (ignore .tmp/.old leftovers)."""
+    return sorted(d for d in root.glob(pattern) if d.is_dir())
+
+
+def _latest_epoch_dir(root: Path) -> Path:
+    eps = _latest_valid(root, "ep_??????")
+    assert eps, f"no session checkpoints under {root}"
+    return eps[-1]
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+def save_session(session, root: str) -> Path:
+    rootp = Path(root)
+    rootp.mkdir(parents=True, exist_ok=True)
+    drv = session._driver
+    if session.epoch < 0:
+        raise RuntimeError("nothing to checkpoint before run()")
+
+    if drv.kind == "incr-iter":
+        from repro.core.ft import checkpoint_job
+        with internal_use():
+            out = checkpoint_job(drv.job, root, session.epoch)
+    elif drv.kind == "onestep-mrbg":
+        tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
+        view = drv.view
+        np.savez(tmp / "view.npz", valid=view.valid, counts=view.counts,
+                 **{f"v_{n}": a for n, a in view.values.items()})
+        meta = _store_to_npz(drv.store, tmp / "mrbg.npz")
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        out = commit()
+    elif drv.kind == "onestep-accumulator":
+        tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
+        view = drv.job.view
+        np.savez(tmp / "acc.npz", valid=view.valid, counts=view.counts,
+                 **{f"v_{n}": a for n, a in view.values.items()},
+                 **{f"a_{n}": a for n, a in drv.job.raw_acc.items()})
+        out = commit()
+    elif drv.kind in ("plain-iter", "distributed"):
+        tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
+        state = drv.result()
+        np.savez(tmp / "state.npz",
+                 struct_keys=drv._keys, struct_valid=drv._valid,
+                 **{f"sv_{n}": a for n, a in state.items()},
+                 **{f"st_{n}": a for n, a in drv._values.items()})
+        out = commit()
+    else:                                 # pragma: no cover
+        raise ValueError(f"unknown driver kind {drv.kind!r}")
+
+    _atomic_write_text(rootp / "session.json", json.dumps(
+        {"kind": drv.kind, "epoch": session.epoch, "mode": drv.mode,
+         "name": session.spec.name}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+def load_session(cls, spec, root: str, config: Optional[RunConfig]):
+    rootp = Path(root)
+    meta = json.loads((rootp / "session.json").read_text())
+    cfg = config or RunConfig()
+    kind = meta["kind"]
+
+    # the driver is chosen by config; pin the config to the snapshot's kind
+    if kind == "onestep-mrbg":
+        cfg = cfg.replace(onestep_path="mrbg")
+    elif kind == "onestep-accumulator":
+        cfg = cfg.replace(onestep_path="accumulator")
+    elif kind == "plain-iter":
+        cfg = cfg.replace(plain_shuffle=True, mesh=None)
+    elif kind == "incr-iter":
+        cfg = cfg.replace(plain_shuffle=False, mesh=None)
+    elif kind == "distributed":
+        if cfg.mesh is None:
+            raise ValueError("restoring a distributed session requires "
+                             "RunConfig(mesh=...) — meshes are not "
+                             "serializable")
+
+    session = cls(spec, cfg)
+    drv = session._driver
+    session.epoch = meta["epoch"]
+    drv.mode = meta["mode"]
+
+    if kind == "incr-iter":
+        from repro.core.ft import restore_job
+        with internal_use():
+            job = restore_job(spec, root)
+        # re-apply the session's config on the restored engine objects
+        job.backend = cfg.backend
+        job.cpc_threshold = cfg.cpc_threshold
+        job.pdelta_threshold = cfg.pdelta_threshold
+        job._store_kw = cfg.store_kw()
+        for k, v in cfg.store_kw().items():
+            setattr(job.store, k, v)
+        drv.job = job
+    elif kind == "onestep-mrbg":
+        d = _latest_epoch_dir(rootp)
+        m = json.loads((d / "meta.json").read_text())
+        vz = np.load(d / "view.npz")
+        values = {k[2:]: vz[k].copy() for k in vz.files if k.startswith("v_")}
+        drv.view = ResultView(spec.num_keys, values, vz["valid"].copy(),
+                              vz["counts"].copy())
+        drv.store = _store_from_npz(spec.num_keys, d / "mrbg.npz", m, cfg)
+        drv._counts = drv.view.counts
+    elif kind == "onestep-accumulator":
+        d = _latest_epoch_dir(rootp)
+        az = np.load(d / "acc.npz")
+        values = {k[2:]: az[k].copy() for k in az.files if k.startswith("v_")}
+        drv.job.view = ResultView(spec.num_keys, values, az["valid"].copy(),
+                                  az["counts"].copy())
+        drv.job.raw_acc = {k[2:]: az[k].copy() for k in az.files
+                           if k.startswith("a_")}
+    elif kind in ("plain-iter", "distributed"):
+        d = _latest_epoch_dir(rootp)
+        sz = np.load(d / "state.npz")
+        drv._keys = sz["struct_keys"].copy()
+        drv._valid = sz["struct_valid"].copy()
+        drv._values = {k[3:]: sz[k].copy() for k in sz.files
+                       if k.startswith("st_")}
+        state = {k[3:]: sz[k] for k in sz.files if k.startswith("sv_")}
+        if kind == "distributed":
+            from repro.core.distributed import partition_state
+            drv.state_parts = partition_state(state, spec.num_state,
+                                              drv.n_parts)
+        else:
+            drv.state = State(
+                {n: jnp.asarray(a) for n, a in state.items()},
+                jnp.ones(spec.num_state, jnp.bool_))
+    return session

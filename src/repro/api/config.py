@@ -1,0 +1,98 @@
+"""RunConfig: every engine knob, declared once.
+
+The paper presents i2MapReduce as a single system in which a job is declared
+once and the runtime decides between fine-grain incremental refresh,
+iterative recomputation, and fallback re-computation.  ``RunConfig``
+collects what the reproduction historically scattered across five entry
+points — backend selection, MRBG-Store policy and window sizes, the CPC
+filter threshold, the MRBG auto-off threshold, convergence control, the
+device mesh for distributed execution, and checkpointing — into one frozen
+dataclass consumed by :class:`repro.api.Session`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.core.mrbg_store import (
+    DEFAULT_CACHE, DEFAULT_FIX_WINDOW, DEFAULT_GAP_T, POLICIES,
+)
+
+ONESTEP_PATHS = ("auto", "mrbg", "accumulator")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    # -- shuffle/reduce backend (repro.kernels.ops): 'xla' | 'pallas' |
+    #    'auto' | None (None defers to config/env/auto resolution)
+    backend: Optional[str] = None
+
+    # -- one-step path: 'mrbg' preserves the fine-grain MRBGraph (§3.3),
+    #    'accumulator' keeps only <K3,V3> (§3.5), 'auto' picks the
+    #    accumulator fast path when the reducer is an abelian group
+    onestep_path: str = "auto"
+
+    # -- MRBG-Store (§3.4 / §5.2)
+    value_bytes: int = 8
+    store_policy: str = "multi-dynamic-window"
+    gap_threshold: int = DEFAULT_GAP_T
+    cache_bytes: int = DEFAULT_CACHE
+    fix_window_bytes: int = DEFAULT_FIX_WINDOW
+
+    # -- convergence control (iterative specs)
+    max_iters: int = 100
+    tol: float = 1e-4
+    refresh_max_iters: Optional[int] = None      # None -> max_iters
+    refresh_tol: Optional[float] = None          # None -> tol
+
+    # -- incremental iterative (§5.3 / §5.2)
+    cpc_threshold: float = 0.0
+    pdelta_threshold: float = 0.5
+
+    # -- plainMR cost modeling (Algorithm 5 baseline): re-shuffle the
+    #    structure data every iteration instead of keeping the loop warm
+    plain_shuffle: bool = False
+
+    # -- distributed execution: a mesh turns the same spec into the
+    #    shard_map + all_to_all engine (§4.3); no separate entry point
+    mesh: Optional[Mesh] = None
+    mesh_axis: str = "data"
+    pod_axis: Optional[str] = None
+    shuffle_cap: int = 4096
+    partition_cap: Optional[int] = None          # None -> sized from data
+
+    # -- checkpointing (§6): directory + cadence in epochs (0 = manual via
+    #    Session.checkpoint only)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+
+    def __post_init__(self):
+        if self.onestep_path not in ONESTEP_PATHS:
+            raise ValueError(
+                f"onestep_path must be one of {ONESTEP_PATHS}, "
+                f"got {self.onestep_path!r}")
+        if self.store_policy not in POLICIES:
+            raise ValueError(
+                f"store_policy must be one of {POLICIES}, "
+                f"got {self.store_policy!r}")
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def refresh_iters_(self) -> int:
+        return self.max_iters if self.refresh_max_iters is None \
+            else self.refresh_max_iters
+
+    @property
+    def refresh_tol_(self) -> float:
+        return self.tol if self.refresh_tol is None else self.refresh_tol
+
+    def store_kw(self) -> dict:
+        """MRBG-Store constructor knobs beyond (num_keys, value_bytes)."""
+        return {"gap_threshold": self.gap_threshold,
+                "cache_bytes": self.cache_bytes,
+                "fix_window_bytes": self.fix_window_bytes}

@@ -1,0 +1,66 @@
+"""RunReport: the one result/telemetry surface for every engine mode.
+
+Merges what the divergent entry points used to return piecemeal —
+``JobResult`` (one-step), ``ResultView`` (incremental one-step), the
+``history`` dict of ``run_iterative``, the ``IterationLog`` list of
+``IncrIterJob.refresh``, and the MRBG-Store ``IOStats`` — into a single
+dataclass every ``Session.run``/``Session.update`` returns.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.incr_iter import IterationLog
+from repro.core.mrbg_store import IOStats
+
+# engine paths a report can come from
+MODES = (
+    "onestep",            # full one-step run (JobSpec)
+    "incremental",        # fine-grain one-step refresh (§3.3)
+    "accumulator",        # accumulator-Reduce refresh (§3.5)
+    "iterative",          # full prime-loop convergence (iterMR, §4)
+    "plainMR",            # plain-shuffle cost-model baseline (Algorithm 5)
+    "i2",                 # incremental iterative refresh (§5)
+    "iterMR-fallback",    # auto MRBG-off recomputation (§5.2)
+    "distributed",        # shard_map + all_to_all prime loop (§4.3)
+)
+
+
+@dataclass
+class RunReport:
+    """Uniform report for one ``run``/``update`` epoch of a Session."""
+
+    name: str                         # spec name
+    mode: str                         # one of MODES
+    epoch: int                        # 0 = initial run, then +1 per update
+    backend: str                      # resolved shuffle/reduce backend
+    iters: int = 1                    # engine iterations this epoch
+    seconds: float = 0.0              # wall-clock of this epoch
+    max_change: List[float] = field(default_factory=list)
+    logs: List[IterationLog] = field(default_factory=list)
+    affected_keys: int = -1           # keys re-reduced by a refresh (-1: n/a)
+    counts: Optional[np.ndarray] = None   # per-key in-edge counts (one-step)
+    io: Optional[IOStats] = None      # MRBG-Store reads for this epoch
+    store_bytes: int = 0              # MRBG file size (incl. obsolete chunks)
+    live_bytes: int = 0               # live chunk bytes
+    store_batches: int = 0
+    mrbg_on: bool = True              # False once §5.2 auto-off has tripped
+    # dense output values; {} when the producer skipped materialization
+    # (run/update return reports without it — read session.result instead)
+    result: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        parts = [f"{self.name}[{self.mode}] epoch={self.epoch}",
+                 f"iters={self.iters}", f"backend={self.backend}",
+                 f"{self.seconds * 1e3:.1f}ms"]
+        if self.affected_keys >= 0:
+            parts.append(f"affected={self.affected_keys}")
+        if self.max_change:
+            parts.append(f"max_change={self.max_change[-1]:.3g}")
+        if self.store_bytes:
+            parts.append(f"store={self.store_bytes}B "
+                         f"(live {self.live_bytes}B)")
+        return " ".join(parts)

@@ -1,0 +1,452 @@
+"""Session: the single supported way to drive the i2MapReduce engine.
+
+A job is declared once (a :class:`JobSpec` or :class:`IterSpec`) together
+with one :class:`RunConfig`; the session then transparently routes
+
+  * ``run(data)``     -> full one-step execution, or prime-loop convergence,
+  * ``update(delta)`` -> fine-grain incremental refresh (§3.3), the
+                         accumulator fast path (§3.5), incremental iterative
+                         refresh with CPC + auto MRBG-off (§5), or a
+                         distributed re-converge,
+  * ``result`` / ``report()`` -> one uniform output surface,
+  * ``checkpoint()`` / ``restore()`` -> fault tolerance (§6),
+
+exactly as the paper presents i2MapReduce: one system, with the engine —
+not the caller — choosing between incremental refresh, iterative
+recomputation, and fallback re-computation.  Distributed execution is not a
+different API: ``RunConfig(mesh=...)`` turns the same spec into the
+shard_map + all_to_all engine of §4.3.
+
+The historical entry points (``run_onestep``, ``IncrementalJob``,
+``run_iterative``/``run_plain``, ``IncrIterJob``, ``run_distributed``,
+``AccumulatorJob``, ``checkpoint_job``/``restore_job``) remain as the
+internal implementation and emit a DeprecationWarning when called directly.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import RunConfig
+from repro.api.report import RunReport
+from repro.core.deprecation import internal_use
+from repro.core.engine import JobSpec, run_onestep
+from repro.core.incremental import (
+    DeltaKV, ResultView, _v2_dict, apply_delta_host, incremental_onestep,
+)
+from repro.core.iterative import IterSpec, State, run_iterative, run_plain
+from repro.core.kvstore import KV, edges_to_host, next_bucket
+from repro.core.mrbg_store import IOStats, MRBGStore
+
+Spec = Union[JobSpec, IterSpec]
+
+
+class Session:
+    """Owns one declared job and all of its preserved state across epochs."""
+
+    def __init__(self, spec: Spec, config: Optional[RunConfig] = None):
+        self.spec = spec
+        self.config = config or RunConfig()
+        self.epoch = -1                     # becomes 0 on run()
+        self._last: Optional[RunReport] = None
+        if isinstance(spec, JobSpec):
+            if self.config.mesh is not None:
+                raise ValueError(
+                    "distributed execution currently requires an IterSpec "
+                    "(one-step jobs have no structure/state co-partitioning)")
+            path = self.config.onestep_path
+            if path == "auto":
+                path = ("accumulator" if spec.reducer.invertible else "mrbg")
+            self._driver = (_OneStepAccumulator(spec, self.config)
+                            if path == "accumulator"
+                            else _OneStepMRBG(spec, self.config))
+        elif isinstance(spec, IterSpec):
+            if self.config.mesh is not None:
+                self._driver = _Distributed(spec, self.config)
+            elif self.config.plain_shuffle:
+                self._driver = _PlainIter(spec, self.config)
+            else:
+                self._driver = _IncrIter(spec, self.config)
+        else:
+            raise TypeError(f"spec must be JobSpec or IterSpec, "
+                            f"got {type(spec).__name__}")
+
+    # -- lifecycle ---------------------------------------------------------
+    def run(self, data: KV) -> RunReport:
+        """Initial job: one-step run or iterative convergence."""
+        if self.epoch >= 0:
+            raise RuntimeError("run() already executed for this session; "
+                               "apply changes with update(delta)")
+        t0 = time.perf_counter()
+        self._driver.run(data)
+        self.epoch = 0
+        return self._finish(t0)
+
+    def update(self, delta: DeltaKV) -> RunReport:
+        """Refresh the preserved job against a signed delta input."""
+        if self.epoch < 0:
+            raise RuntimeError("update() before run(); execute the initial "
+                               "job first")
+        t0 = time.perf_counter()
+        self._driver.update(delta)
+        self.epoch += 1
+        return self._finish(t0)
+
+    def _finish(self, t0: float) -> RunReport:
+        # skip the dense result copy here: each epoch would otherwise pay
+        # an O(|D|) device->host transfer even when nobody reads it
+        rep = self.report(include_result=False)
+        rep.seconds = time.perf_counter() - t0
+        self._last = rep
+        cfg = self.config
+        if (cfg.checkpoint_dir is not None and cfg.checkpoint_every > 0
+                and self.epoch % cfg.checkpoint_every == 0):
+            self.checkpoint(cfg.checkpoint_dir)
+        return rep
+
+    # -- uniform outputs ---------------------------------------------------
+    @property
+    def result(self) -> Dict[str, np.ndarray]:
+        """Dense host view of the job's current output values."""
+        if self.epoch < 0:
+            raise RuntimeError("no result before run()")
+        return self._driver.result()
+
+    def report(self, include_result: bool = True) -> RunReport:
+        """Uniform report of the session's current state / last epoch.
+
+        ``include_result=False`` skips materializing the dense host copy
+        of the output (``session.result`` fetches it on demand).
+        """
+        if self.epoch < 0:
+            raise RuntimeError("no report before run()")
+        rep = RunReport(name=self.spec.name, mode=self._driver.mode,
+                        epoch=self.epoch, backend=self._driver.backend(),
+                        result=self._driver.result() if include_result
+                        else {})
+        self._driver.fill(rep)
+        if self._last is not None and self._last.epoch == self.epoch:
+            rep.seconds = self._last.seconds
+        return rep
+
+    # -- fault tolerance ---------------------------------------------------
+    def checkpoint(self, path: Optional[str] = None) -> Path:
+        """Atomically snapshot all preserved state (view/state, MRBG-Store,
+        CPC accumulators, structure mirror) under ``path``."""
+        from repro.api.ckpt import save_session
+        target = path or self.config.checkpoint_dir
+        if target is None:
+            raise ValueError("no checkpoint path: pass one or set "
+                             "RunConfig(checkpoint_dir=...)")
+        return save_session(self, str(target))
+
+    @classmethod
+    def restore(cls, spec: Spec, path: str,
+                config: Optional[RunConfig] = None) -> "Session":
+        """Rebuild a session from :meth:`checkpoint` output; the next
+        ``update(delta)`` resumes exactly where the snapshot left off."""
+        from repro.api.ckpt import load_session
+        return load_session(cls, spec, str(path), config)
+
+    # -- escape hatches (engine internals, read-only use) ------------------
+    @property
+    def view(self) -> Optional[ResultView]:
+        return getattr(self._driver, "view", None)
+
+    @property
+    def state(self) -> Optional[State]:
+        return getattr(self._driver, "state", None)
+
+
+# ---------------------------------------------------------------------------
+# Drivers: one per engine path; each owns the preserved state
+# ---------------------------------------------------------------------------
+
+class _OneStepMRBG:
+    """run_onestep + MRBG-Store + incremental_onestep (§3.3/§3.4)."""
+
+    kind = "onestep-mrbg"
+
+    def __init__(self, spec: JobSpec, cfg: RunConfig):
+        self.spec = spec
+        self.cfg = cfg
+        self.store = MRBGStore(spec.num_keys, cfg.value_bytes,
+                               policy=cfg.store_policy, **cfg.store_kw())
+        self.view: Optional[ResultView] = None
+        self.mode = "onestep"
+        self._counts: Optional[np.ndarray] = None
+        self._affected = -1
+
+    def backend(self) -> str:
+        from repro.kernels import ops
+        return ops.resolve_backend(self.cfg.backend)
+
+    def run(self, inp: KV) -> None:
+        with internal_use():
+            res = run_onestep(self.spec, inp, preserve=True,
+                              backend=self.cfg.backend)
+        host = edges_to_host(res.edges)
+        self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
+        self.view = ResultView.from_job(self.spec.num_keys, res.results,
+                                        res.counts)
+        self._counts = np.asarray(res.counts)
+        self.mode = "onestep"
+
+    def update(self, delta: DeltaKV) -> None:
+        self.store.reset_stats()
+        stats = incremental_onestep(self.spec, delta, self.store, self.view,
+                                    backend=self.cfg.backend)
+        self._affected = int(stats.get("affected", 0))
+        self._counts = self.view.counts
+        self.mode = "incremental"
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return self.view.as_dict()
+
+    def fill(self, rep: RunReport) -> None:
+        rep.counts = self._counts
+        rep.affected_keys = self._affected
+        rep.io = self.store.stats
+        rep.store_bytes = self.store.file_bytes()
+        rep.live_bytes = self.store.live_bytes()
+        rep.store_batches = self.store.n_batches
+
+
+class _OneStepAccumulator:
+    """Accumulator-Reduce fast path: preserves only <K3,V3> (§3.5)."""
+
+    kind = "onestep-accumulator"
+
+    def __init__(self, spec: JobSpec, cfg: RunConfig):
+        from repro.core.accumulator import AccumulatorJob
+        self.spec = spec
+        self.cfg = cfg
+        with internal_use():
+            self.job = AccumulatorJob(spec, backend=cfg.backend)
+        self.mode = "onestep"
+
+    @property
+    def view(self) -> Optional[ResultView]:
+        return self.job.view
+
+    def backend(self) -> str:
+        from repro.kernels import ops
+        return ops.resolve_backend(self.cfg.backend)
+
+    def run(self, inp: KV) -> None:
+        self.job.initial_run(inp)
+        self.mode = "onestep"
+
+    def update(self, delta: DeltaKV) -> None:
+        self.job.incremental_run(delta)
+        self.mode = "accumulator"
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return self.job.view.as_dict()
+
+    def fill(self, rep: RunReport) -> None:
+        rep.counts = self.job.view.counts
+        rep.mrbg_on = False               # nothing preserved beyond <K3,V3>
+
+
+class _IncrIter:
+    """IncrIterJob: converge once, then fine-grain refresh (§5)."""
+
+    kind = "incr-iter"
+
+    def __init__(self, spec: IterSpec, cfg: RunConfig):
+        self.spec = spec
+        self.cfg = cfg
+        self.job = None                   # built on run() (needs struct)
+        self.mode = "iterative"
+        self._iters = 0
+        self._max_change: list = []
+        self._logs: list = []
+
+    @property
+    def state(self) -> Optional[State]:
+        return self.job.state if self.job is not None else None
+
+    def backend(self) -> str:
+        from repro.kernels import ops
+        return ops.resolve_backend(self.cfg.backend)
+
+    def _make_job(self, struct: KV):
+        from repro.core.incr_iter import IncrIterJob
+        with internal_use():
+            return IncrIterJob(
+                struct=struct, spec=self.spec,
+                value_bytes=self.cfg.value_bytes,
+                policy=self.cfg.store_policy,
+                cpc_threshold=self.cfg.cpc_threshold,
+                pdelta_threshold=self.cfg.pdelta_threshold,
+                backend=self.cfg.backend, store_kw=self.cfg.store_kw())
+
+    def run(self, struct: KV) -> None:
+        self.job = self._make_job(struct)
+        _, hist = self.job.initial_converge(max_iters=self.cfg.max_iters,
+                                            tol=self.cfg.tol)
+        self.mode = "iterative"
+        self._iters = hist["iters"]
+        self._max_change = hist["max_change"]
+        self._logs = []
+
+    def update(self, delta: DeltaKV) -> None:
+        _, hist = self.job.refresh(delta,
+                                   max_iters=self.cfg.refresh_iters_,
+                                   tol=self.cfg.refresh_tol_)
+        self.mode = hist["mode"]
+        self._iters = hist["iters"]
+        self._logs = hist.get("logs", [])
+        self._max_change = []
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return self.job.state.to_host()
+
+    def fill(self, rep: RunReport) -> None:
+        rep.iters = self._iters
+        rep.max_change = list(self._max_change)
+        rep.logs = list(self._logs)
+        if self._logs:
+            rep.affected_keys = sum(l.n_affected_dks for l in self._logs)
+            rep.io = IOStats(n_reads=sum(l.io_reads for l in self._logs),
+                             bytes_read=sum(l.io_bytes for l in self._logs))
+        rep.store_bytes = self.job.store.file_bytes()
+        rep.live_bytes = self.job.store.live_bytes()
+        rep.store_batches = self.job.store.n_batches
+        rep.mrbg_on = self.job.mrbg_on
+
+
+class _PlainIter:
+    """plainMR recomp baseline: re-shuffles structure data every iteration
+    and recomputes every epoch from scratch (Algorithm 5 cost model)."""
+
+    kind = "plain-iter"
+
+    def __init__(self, spec: IterSpec, cfg: RunConfig):
+        self.spec = spec
+        self.cfg = cfg
+        self.state: Optional[State] = None
+        self.mode = "plainMR"
+        self._iters = 0
+        self._max_change: list = []
+
+    def backend(self) -> str:
+        from repro.kernels import ops
+        return ops.resolve_backend(self.cfg.backend)
+
+    def run(self, struct: KV) -> None:
+        self._keys = np.array(struct.keys)
+        self._values = {n: np.array(a) for n, a in struct.values.items()}
+        self._valid = np.array(struct.valid)
+        self._converge(self.cfg.max_iters, self.cfg.tol)
+
+    def _struct_kv(self) -> KV:
+        return KV(jnp.asarray(self._keys),
+                  {n: jnp.asarray(a) for n, a in self._values.items()},
+                  jnp.asarray(self._valid))
+
+    def _converge(self, max_iters: int, tol: float) -> None:
+        with internal_use():
+            self.state, hist = run_plain(self.spec, self._struct_kv(), None,
+                                         max_iters=max_iters, tol=tol,
+                                         backend=self.cfg.backend)
+        self._iters = hist["iters"]
+        self._max_change = hist["max_change"]
+
+    def update(self, delta: DeltaKV) -> None:
+        apply_delta_host(self._keys, self._values, self._valid, delta)
+        # vanilla MR: recompute everything (under the refresh budget)
+        self._converge(self.cfg.refresh_iters_, self.cfg.refresh_tol_)
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return self.state.to_host()
+
+    def fill(self, rep: RunReport) -> None:
+        rep.iters = self._iters
+        rep.max_change = list(self._max_change)
+        rep.mrbg_on = False
+
+
+class _Distributed:
+    """shard_map + all_to_all prime loop over RunConfig.mesh (§4.3).
+
+    ``update`` applies the delta to the host structure mirror, re-partitions
+    (Eq. 2), and re-converges *warm* from the current co-located state —
+    the distributed analogue of iterMR refresh.
+    """
+
+    kind = "distributed"
+
+    def __init__(self, spec: IterSpec, cfg: RunConfig):
+        if spec.replicate_state:
+            raise ValueError(
+                "replicate_state (all-to-one) specs broadcast their state; "
+                "the co-partitioned distributed engine does not support "
+                "them — run without a mesh (auto iterMR mode)")
+        self.spec = spec
+        self.cfg = cfg
+        mesh = cfg.mesh
+        self.n_parts = mesh.shape[cfg.mesh_axis] * (
+            mesh.shape[cfg.pod_axis] if cfg.pod_axis else 1)
+        self.state_parts: Optional[Dict[str, np.ndarray]] = None
+        self.mode = "distributed"
+        self._iters = 0
+        self._max_change: list = []
+
+    def backend(self) -> str:
+        from repro.kernels import ops
+        return ops.resolve_backend(self.cfg.backend)
+
+    def run(self, struct: KV) -> None:
+        self._keys = np.array(struct.keys)
+        self._values = {n: np.array(a) for n, a in struct.values.items()}
+        self._valid = np.array(struct.valid)
+        if self.state_parts is None:      # may be pre-seeded by restore
+            from repro.core.distributed import partition_state
+            dks = jnp.arange(self.spec.num_state, dtype=jnp.int32)
+            init = jax.tree.map(np.asarray, self.spec.init_state(dks))
+            self.state_parts = partition_state(init, self.spec.num_state,
+                                               self.n_parts)
+        self._converge(self.cfg.max_iters, self.cfg.tol)
+
+    def _partition_cap(self) -> int:
+        if self.cfg.partition_cap is not None:
+            return self.cfg.partition_cap
+        dks = np.asarray(jax.jit(self.spec.project)(jnp.asarray(self._keys)))
+        pid = (dks.astype(np.uint32) % self.n_parts).astype(np.int32)
+        load = np.bincount(pid[self._valid], minlength=self.n_parts)
+        return next_bucket(max(int(load.max()), 1), 64)
+
+    def _converge(self, max_iters: int, tol: float) -> None:
+        from repro.core.distributed import partition_struct, run_distributed
+        parts = partition_struct(self.spec, self._keys, self._values,
+                                 self._valid, self.n_parts,
+                                 self._partition_cap())
+        with internal_use():
+            out, hist = run_distributed(
+                self.spec, self.cfg.mesh, parts, self.state_parts,
+                axis=self.cfg.mesh_axis, pod_axis=self.cfg.pod_axis,
+                shuffle_cap=self.cfg.shuffle_cap, max_iters=max_iters,
+                tol=tol, backend=self.cfg.backend)
+        self.state_parts = {n: np.asarray(a) for n, a in out.items()}
+        self._iters = hist["iters"]
+        self._max_change = hist["max_change"]
+
+    def update(self, delta: DeltaKV) -> None:
+        apply_delta_host(self._keys, self._values, self._valid, delta)
+        self._converge(self.cfg.refresh_iters_, self.cfg.refresh_tol_)
+
+    def result(self) -> Dict[str, np.ndarray]:
+        from repro.core.distributed import unpartition_state
+        return unpartition_state(self.state_parts, self.spec.num_state)
+
+    def fill(self, rep: RunReport) -> None:
+        rep.iters = self._iters
+        rep.max_change = list(self._max_change)
+        rep.mrbg_on = False

@@ -1,1 +1,7 @@
 # Apps are imported lazily (import repro.apps.<name>) to keep import costs low.
+#
+# Every app module follows the same convention:
+#   make_job(...) -> (spec, data)   # JobSpec or IterSpec + the input KV,
+#                                   # ready for repro.api.Session(spec).run(data)
+#   make_spec / make_input / make_struct    # the underlying pieces
+#   oracle(...)                             # dense numpy reference semantics

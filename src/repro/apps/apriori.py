@@ -44,6 +44,14 @@ def make_spec(pairs: np.ndarray) -> JobSpec:
     return JobSpec(map_fn, sum_reducer(), p, "apriori")
 
 
+def make_job(tweets: np.ndarray, pairs: np.ndarray, tweet_ids=None,
+             valid=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    if tweet_ids is None:
+        tweet_ids = np.arange(len(tweets), dtype=np.int32)
+    return make_spec(pairs), make_input(tweet_ids, tweets, valid)
+
+
 def candidate_pairs(tweets: np.ndarray, vocab: int, top: int = 64,
                     seed: int = 0) -> np.ndarray:
     """Preprocessing job: pick candidate pairs from frequent words."""

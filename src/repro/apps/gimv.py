@@ -67,6 +67,12 @@ def make_spec(nb: int, bs: int, b_vec: np.ndarray) -> IterSpec:
     )
 
 
+def make_job(blocks: np.ndarray, nb: int, bs: int, b_vec: np.ndarray,
+             valid_rows=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    return make_spec(nb, bs, b_vec), make_struct(blocks, nb, valid_rows)
+
+
 def oracle(blocks: np.ndarray, nb: int, bs: int, b_vec: np.ndarray,
            iters: int = 300, tol: float = 1e-10,
            valid_rows=None) -> np.ndarray:

@@ -72,6 +72,13 @@ def make_spec(k: int, dim: int, init_centroids: np.ndarray) -> IterSpec:
     )
 
 
+def make_job(points: np.ndarray, init_centroids: np.ndarray,
+             valid_rows=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    k, dim = init_centroids.shape
+    return make_spec(k, dim, init_centroids), make_struct(points, valid_rows)
+
+
 def oracle(points: np.ndarray, init_centroids: np.ndarray,
            iters: int = 100, tol: float = 1e-6, valid_rows=None):
     pts = points.astype(np.float64)

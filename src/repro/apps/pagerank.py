@@ -51,6 +51,11 @@ def make_spec(num_vertices: int) -> IterSpec:
     )
 
 
+def make_job(nbrs: np.ndarray, valid_rows=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    return make_spec(nbrs.shape[0]), make_struct(nbrs, valid_rows)
+
+
 def oracle(nbrs: np.ndarray, valid_rows=None, iters: int = 200,
            tol: float = 1e-12) -> np.ndarray:
     """Dense numpy power iteration with identical semantics."""

@@ -78,6 +78,11 @@ def make_spec(num_vertices: int) -> IterSpec:
     )
 
 
+def make_job(nbrs: np.ndarray, w: np.ndarray, src: int, valid_rows=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    return make_spec(nbrs.shape[0]), make_struct(nbrs, w, src, valid_rows)
+
+
 def oracle(nbrs: np.ndarray, w: np.ndarray, src: int,
            valid_rows=None) -> np.ndarray:
     """Bellman-Ford reference."""

@@ -33,6 +33,13 @@ def make_spec(vocab: int) -> JobSpec:
     return JobSpec(map_fn, sum_reducer(), vocab, "wordcount")
 
 
+def make_job(docs: np.ndarray, vocab: int, doc_ids=None, valid=None):
+    """Uniform app entry: ``(spec, data)`` ready for ``repro.api.Session``."""
+    if doc_ids is None:
+        doc_ids = np.arange(len(docs), dtype=np.int32)
+    return make_spec(vocab), make_input(doc_ids, docs, valid)
+
+
 def oracle(docs: np.ndarray, vocab: int, valid=None) -> np.ndarray:
     counts = np.zeros(vocab)
     for i, d in enumerate(docs):

@@ -1,0 +1,35 @@
+"""Deprecation plumbing for the pre-`repro.api` entry points.
+
+The engine's historical entry points (``run_onestep``, ``IncrementalJob``,
+``run_iterative``/``run_plain``, ``IncrIterJob``, ``run_distributed``,
+``AccumulatorJob``, ``checkpoint_job``/``restore_job``) remain the *internal
+implementation* that :class:`repro.api.Session` drives, but direct use is
+deprecated for one release.  ``internal_use()`` suppresses the warning while
+the façade (or another engine layer) calls through them, so a user only ever
+sees the warning for *their own* legacy call.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+_suppress_depth = 0
+
+
+@contextlib.contextmanager
+def internal_use():
+    """Mark the enclosed legacy-entry-point calls as engine-internal."""
+    global _suppress_depth
+    _suppress_depth += 1
+    try:
+        yield
+    finally:
+        _suppress_depth -= 1
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    if _suppress_depth == 0:
+        warnings.warn(
+            f"{old} is deprecated and will be removed after one release; "
+            f"use {new} instead (see README migration table)",
+            DeprecationWarning, stacklevel=stacklevel)

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.deprecation import warn_deprecated
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, finalize_reduce, segment_reduce,
 )
@@ -216,13 +217,18 @@ def run_distributed(spec: IterSpec, mesh: Mesh, struct_parts, state_parts,
                     *, axis: str = "data", pod_axis: Optional[str] = None,
                     shuffle_cap: int = 4096, max_iters: int = 50,
                     tol: float = 1e-6, backend: Optional[str] = None):
-    """Drive the distributed prime loop to convergence."""
+    """Drive the distributed prime loop to convergence.
+
+    Deprecated as a user entry point: use ``repro.api.Session`` with
+    ``RunConfig(mesh=...)``.
+    """
+    warn_deprecated("repro.core.distributed.run_distributed",
+                    "repro.api.Session with RunConfig(mesh=...)")
     step = make_distributed_step(spec, mesh, axis, shuffle_cap,
                                  pod_axis=pod_axis, backend=backend)
     skeys, svals, svalid = struct_parts
     state = state_parts
-    from repro.core.iterative import default_difference
-    diff_fn = spec.difference or default_difference
+    diff_fn = spec.difference
     history = {"iters": 0, "max_change": [], "dropped": 0}
     for it in range(max_iters):
         new_vals, counts, drop = step(jnp.asarray(skeys),

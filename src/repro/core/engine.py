@@ -26,6 +26,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.deprecation import warn_deprecated
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, make_kv, segment_reduce, sort_edges,
 )
@@ -81,7 +82,11 @@ def run_onestep(spec: JobSpec, inp: KV, *, preserve: bool = False,
     be ingested by :class:`repro.core.mrbg_store.MRBGStore`.  ``backend``
     overrides the shuffle/reduce backend (resolved outside the jit so that
     switching backends retraces).
+
+    Deprecated as a user entry point: drive jobs through
+    ``repro.api.Session`` instead.
     """
+    warn_deprecated("repro.core.engine.run_onestep", "repro.api.Session.run")
     spec_static = (spec.map_fn, spec.reducer, spec.num_keys,
                    ops.resolve_backend(backend))
     sign = jnp.ones(inp.capacity, jnp.int8)

@@ -26,14 +26,19 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.incr_iter import IncrIterJob
 from repro.core.iterative import IterSpec, State
-from repro.core.mrbg_store import MRBGStore
+from repro.core.mrbg_store import (
+    MRBGStore, load_store_state, store_blobs, store_meta,
+)
 
 import jax.numpy as jnp
 
 
 def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
+    warn_deprecated("repro.core.ft.checkpoint_job",
+                    "repro.api.Session.checkpoint")
     rootp = Path(root)
     rootp.mkdir(parents=True, exist_ok=True)
     tmp = rootp / f"it_{iteration:06d}.tmp"
@@ -51,26 +56,9 @@ def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
              **{f"st_{k}": v for k, v in job.struct_values.items()})
     # MRBG-Store: batches + index (the paper's per-iteration MRBG checkpoint)
     store = job.store
-    blobs = {}
-    for i, b in enumerate(store.batches):
-        blobs[f"b{i}_k2"] = b.k2
-        blobs[f"b{i}_mk"] = b.mk
-        blobs[f"b{i}_sign"] = b.sign
-        for n, a in b.v2.items():
-            blobs[f"b{i}_v2_{n}"] = a
-    np.savez(tmp / "mrbg.npz", idx_batch=store.idx_batch,
-             idx_start=store.idx_start, idx_len=store.idx_len, **blobs)
-    meta = {
-        "iteration": iteration,
-        "n_batches": store.n_batches,
-        "offsets": [b.offset for b in store.batches],
-        "v2_names": sorted({n for b in store.batches for n in b.v2}),
-        "mrbg_on": job.mrbg_on,
-        "file_records": store.file_records,
-        "live_records": store.live_records,
-        "value_bytes": store.record_bytes - 8,
-        "policy": store.policy,
-    }
+    np.savez(tmp / "mrbg.npz", **store_blobs(store))
+    meta = {"iteration": iteration, "n_batches": store.n_batches,
+            "mrbg_on": job.mrbg_on, **store_meta(store)}
     (tmp / "meta.json").write_text(json.dumps(meta))
     if final.exists():
         shutil.rmtree(final)
@@ -80,6 +68,7 @@ def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
 
 def restore_job(spec: IterSpec, root: str,
                 iteration: Optional[int] = None) -> IncrIterJob:
+    warn_deprecated("repro.core.ft.restore_job", "repro.api.Session.restore")
     rootp = Path(root)
     its = sorted(rootp.glob("it_??????"))
     assert its, "no checkpoints"
@@ -92,8 +81,9 @@ def restore_job(spec: IterSpec, root: str,
     struct = make_kv(st["struct_keys"],
                      {k: jnp.asarray(v) for k, v in struct_vals.items()},
                      st["struct_valid"])
-    job = IncrIterJob(spec, struct, value_bytes=meta["value_bytes"],
-                      policy=meta["policy"])
+    with internal_use():
+        job = IncrIterJob(spec, struct, value_bytes=meta["value_bytes"],
+                          policy=meta["policy"])
     sv = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("sv_")}
     ev = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("ev_")}
     job.state = State(sv, jnp.ones(spec.num_state, jnp.bool_))
@@ -101,20 +91,7 @@ def restore_job(spec: IterSpec, root: str,
     job.cpc_accum = st["cpc"].copy()
     job.mrbg_on = meta["mrbg_on"]
 
-    mz = np.load(d / "mrbg.npz")
-    store = job.store
-    from repro.core.mrbg_store import _Batch
-    names = meta["v2_names"]
-    for i, off in enumerate(meta["offsets"]):
-        v2 = {n: mz[f"b{i}_v2_{n}"] for n in names
-              if f"b{i}_v2_{n}" in mz.files}
-        store.batches.append(_Batch(mz[f"b{i}_k2"], mz[f"b{i}_mk"], v2,
-                                    mz[f"b{i}_sign"], off))
-    store.idx_batch = mz["idx_batch"].copy()
-    store.idx_start = mz["idx_start"].copy()
-    store.idx_len = mz["idx_len"].copy()
-    store.file_records = meta["file_records"]
-    store.live_records = meta["live_records"]
+    load_store_state(job.store, np.load(d / "mrbg.npz"), meta)
     return job
 
 

@@ -33,9 +33,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.incremental import DeltaKV, _merge_reduce, _pad_edges
+from repro.core.deprecation import internal_use, warn_deprecated
+from repro.core.incremental import (
+    DeltaKV, _merge_reduce, _pad_edges, apply_delta_host,
+)
 from repro.core.iterative import (
-    IterSpec, State, _iter_step, default_difference, run_iterative,
+    IterSpec, State, run_iterative,
 )
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, edges_to_host, next_bucket, sort_edges,
@@ -65,12 +68,17 @@ class IncrIterJob:
                  policy: str = "multi-dynamic-window",
                  cpc_threshold: float = 0.0,
                  pdelta_threshold: float = 0.5,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 store_kw: Optional[Dict[str, Any]] = None):
+        warn_deprecated("repro.core.incr_iter.IncrIterJob",
+                        "repro.api.Session")
         self.spec = spec
         self.backend = backend
         self.cpc_threshold = cpc_threshold
         self.pdelta_threshold = pdelta_threshold
-        self.store = MRBGStore(spec.num_state, value_bytes, policy=policy)
+        self._store_kw = dict(store_kw or {})
+        self.store = MRBGStore(spec.num_state, value_bytes, policy=policy,
+                               **self._store_kw)
         self.mrbg_on = True
 
         # host mirror of the structure data (the partitioned structure file)
@@ -120,9 +128,11 @@ class IncrIterJob:
     # ------------------------------------------------------------------
     def initial_converge(self, *, max_iters: int = 100, tol: float = 1e-4):
         """Job A_0: full iterative run; preserve final-iteration MRBGraph."""
-        state, hist = run_iterative(self.spec, self._struct_kv(), None,
-                                    max_iters=max_iters, tol=tol,
-                                    preserve_last=True, backend=self.backend)
+        with internal_use():
+            state, hist = run_iterative(self.spec, self._struct_kv(), None,
+                                        max_iters=max_iters, tol=tol,
+                                        preserve_last=True,
+                                        backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self._preserve(hist["last_edges"])
@@ -146,17 +156,9 @@ class IncrIterJob:
 
         # -- apply the delta to the structure mirror ----------------------
         rid = np.asarray(delta_struct.record_ids)
-        sgn = np.asarray(delta_struct.sign)
         dvalid = np.asarray(delta_struct.valid)
-        for i in np.nonzero(dvalid)[0]:
-            r = int(rid[i])
-            if sgn[i] < 0:
-                self.struct_valid[r] = False
-            else:
-                self.struct_valid[r] = True
-                self.struct_keys[r] = int(np.asarray(delta_struct.keys)[i])
-                for n, a in self.struct_values.items():
-                    a[r] = np.asarray(delta_struct.values[n])[i]
+        apply_delta_host(self.struct_keys, self.struct_values,
+                         self.struct_valid, delta_struct)
         self._rebuild_reverse_index()
 
         if spec.replicate_state or not self.mrbg_on:
@@ -268,7 +270,7 @@ class IncrIterJob:
         self.store.mark_deleted(affected[counts_h == 0])
 
         # CPC: accumulate per-DK change; emit above-threshold keys
-        diff_fn = spec.difference or default_difference
+        diff_fn = spec.difference
         aff_idx = jnp.asarray(affected.astype(np.int32))
         old_vals = {n: jnp.take(a, aff_idx, axis=0)
                     for n, a in state_vals.items()}
@@ -312,14 +314,16 @@ class IncrIterJob:
     def _fallback_iterate(self, max_iters: int, tol: float):
         """iterMR mode from the current state; rebuild MRBGraph at the end."""
         t0 = time.perf_counter()
-        state, hist = run_iterative(self.spec, self._struct_kv(), self.state,
-                                    max_iters=max_iters, tol=tol,
-                                    preserve_last=True, backend=self.backend)
+        with internal_use():
+            state, hist = run_iterative(self.spec, self._struct_kv(),
+                                        self.state, max_iters=max_iters,
+                                        tol=tol, preserve_last=True,
+                                        backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self.store = MRBGStore(self.spec.num_state,
                                self.store.record_bytes - 8,
-                               policy=self.store.policy)
+                               policy=self.store.policy, **self._store_kw)
         if hist["last_edges"] is not None:
             self._preserve(hist["last_edges"])
         self.mrbg_on = True

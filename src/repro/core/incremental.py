@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.engine import JobSpec, run_onestep
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce, make_kv,
@@ -55,13 +56,55 @@ class DeltaKV(NamedTuple):
         return self.keys.shape[0]
 
 
-def make_delta(keys, record_ids, values, sign, valid=None) -> DeltaKV:
+def make_delta(record_ids, values=None, sign=None, keys=None,
+               valid=None) -> DeltaKV:
+    """Build a :class:`DeltaKV`.
+
+    ``keys`` (the semantic K1) defaults to ``record_ids`` — for every engine
+    app the Map-instance identity *is* the record key, so the historical
+    ``make_delta(rid, rid, ...)`` spelling is no longer needed.
+
+    The pre-``repro.api`` argument order ``(keys, record_ids, values, sign)``
+    is still accepted (detected by the values pytree arriving in the ``sign``
+    slot) with a DeprecationWarning.
+    """
+    if isinstance(sign, dict) and not isinstance(values, dict):
+        # legacy positional order: (keys, record_ids, values, sign)
+        from repro.core.deprecation import warn_deprecated
+        warn_deprecated("make_delta(keys, record_ids, values, sign)",
+                        "make_delta(record_ids, values, sign[, keys=...])")
+        record_ids, values, sign, keys = values, sign, keys, record_ids
+    record_ids = jnp.asarray(record_ids, jnp.int32)
+    if keys is None:
+        keys = record_ids
     keys = jnp.asarray(keys, jnp.int32)
     if valid is None:
         valid = jnp.ones(keys.shape[0], jnp.bool_)
-    return DeltaKV(keys, jnp.asarray(record_ids, jnp.int32),
+    return DeltaKV(keys, record_ids,
                    jax.tree.map(jnp.asarray, values),
                    jnp.asarray(valid, jnp.bool_), jnp.asarray(sign, jnp.int8))
+
+
+def apply_delta_host(keys: np.ndarray, values: Dict[str, np.ndarray],
+                     valid: np.ndarray, delta: DeltaKV) -> None:
+    """Apply a signed delta to a host-side record mirror, in place.
+
+    The mirror plays the role of the partitioned input file on HDFS: '-'
+    rows invalidate a record slot, '+' rows (re)write it.
+    """
+    rid = np.asarray(delta.record_ids)
+    sgn = np.asarray(delta.sign)
+    dvalid = np.asarray(delta.valid)
+    dkeys = np.asarray(delta.keys)
+    for i in np.nonzero(dvalid)[0]:
+        r = int(rid[i])
+        if sgn[i] < 0:
+            valid[r] = False
+        else:
+            valid[r] = True
+            keys[r] = int(dkeys[i])
+            for n, a in values.items():
+                a[r] = np.asarray(delta.values[n])[i]
 
 
 class ResultView:
@@ -106,6 +149,8 @@ class IncrementalJob:
     def __init__(self, spec: JobSpec, value_bytes: int = 8,
                  policy: str = "multi-dynamic-window",
                  backend: Optional[str] = None):
+        warn_deprecated("repro.core.incremental.IncrementalJob",
+                        "repro.api.Session")
         self.spec = spec
         self.backend = backend
         self.store = MRBGStore(spec.num_keys, value_bytes, policy=policy)
@@ -113,8 +158,9 @@ class IncrementalJob:
 
     # -- initial run -------------------------------------------------------
     def initial_run(self, inp: KV) -> ResultView:
-        res = run_onestep(self.spec, inp, preserve=True,
-                          backend=self.backend)
+        with internal_use():
+            res = run_onestep(self.spec, inp, preserve=True,
+                              backend=self.backend)
         host = edges_to_host(res.edges)
         self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
         self.view = ResultView.from_job(self.spec.num_keys, res.results,

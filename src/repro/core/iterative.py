@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, segment_reduce, sort_edges,
 )
@@ -41,20 +42,6 @@ from repro.kernels import ops
 IterMapFn = Callable[[KV, Any, jax.Array], Edges]
 
 
-@dataclass(frozen=True)
-class IterSpec:
-    map_fn: IterMapFn
-    reducer: Reducer
-    project: Callable[[jax.Array], jax.Array]    # [N] SK -> [N] DK
-    num_state: int
-    init_state: Callable[[jax.Array], Any]       # [K] DK -> DV pytree
-    # difference(DV_curr, DV_prev) -> [K] per-key change magnitude
-    difference: Callable[[Any, Any], jax.Array] = None  # type: ignore
-    replicate_state: bool = False                # all-to-one (Kmeans)
-    stable_topology: bool = True                 # map K2 fanout fixed per SK
-    name: str = "iter_job"
-
-
 def default_difference(curr: Dict[str, jax.Array],
                        prev: Dict[str, jax.Array]) -> jax.Array:
     """Max-abs change across all DV leaves, per state key."""
@@ -63,6 +50,25 @@ def default_difference(curr: Dict[str, jax.Array],
         d = jnp.abs(curr[n].astype(jnp.float32) - prev[n].astype(jnp.float32))
         diffs.append(d.reshape(d.shape[0], -1).max(axis=1))
     return functools.reduce(jnp.maximum, diffs)
+
+
+@dataclass(frozen=True)
+class IterSpec:
+    map_fn: IterMapFn
+    reducer: Reducer
+    project: Callable[[jax.Array], jax.Array]    # [N] SK -> [N] DK
+    num_state: int
+    init_state: Callable[[jax.Array], Any]       # [K] DK -> DV pytree
+    # difference(DV_curr, DV_prev) -> [K] per-key change magnitude;
+    # None resolves to default_difference, so readers may call it directly
+    difference: Optional[Callable[[Any, Any], jax.Array]] = None
+    replicate_state: bool = False                # all-to-one (Kmeans)
+    stable_topology: bool = True                 # map K2 fanout fixed per SK
+    name: str = "iter_job"
+
+    def __post_init__(self):
+        if self.difference is None:
+            object.__setattr__(self, "difference", default_difference)
 
 
 class State:
@@ -113,10 +119,14 @@ def run_iterative(spec: IterSpec, struct: KV, state: Optional[State] = None,
 
     Returns (state, history dict).  ``preserve_last`` additionally returns the
     final iteration's MRBGraph edges (to seed incremental jobs, Section 5.1).
+
+    Deprecated as a user entry point: use ``repro.api.Session.run``.
     """
+    warn_deprecated("repro.core.iterative.run_iterative",
+                    "repro.api.Session.run")
     if state is None:
         state = State.init(spec)
-    diff_fn = spec.difference or default_difference
+    diff_fn = spec.difference
     spec_static = (spec.map_fn, spec.reducer, spec.project, spec.num_state,
                    spec.replicate_state, ops.resolve_backend(backend))
     dks = spec.project(struct.keys) if not spec.replicate_state else \
@@ -147,7 +157,12 @@ def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
     """plainMR recomp baseline: same math, but models vanilla-MapReduce cost
     by re-shuffling the *structure* data every iteration (the extra join job
     of Algorithm 5 / HaLoop).  Used by the benchmark harness for the cost
-    comparison; results are identical to :func:`run_iterative`."""
+    comparison; results are identical to :func:`run_iterative`.
+
+    Deprecated as a user entry point: use ``repro.api.Session`` with
+    ``RunConfig(plain_shuffle=True)``."""
+    warn_deprecated("repro.core.iterative.run_plain",
+                    "repro.api.Session with RunConfig(plain_shuffle=True)")
     def on_it(it, st, ch):
         # the extra structure shuffle: sort structure kv-pairs by key and
         # gather every value column through the permutation
@@ -157,4 +172,5 @@ def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
                          if hasattr(a, 'block_until_ready') else a,
                          res.payload)
     kw.setdefault("on_iteration", on_it)
-    return run_iterative(spec, struct, state, **kw)
+    with internal_use():
+        return run_iterative(spec, struct, state, **kw)

@@ -327,6 +327,50 @@ class MRBGStore:
         return self.live_records * self.record_bytes
 
 
+# ---------------------------------------------------------------------------
+# Store (de)serialization: the one batch/index npz layout, shared by the
+# per-iteration engine checkpoints (repro.core.ft) and the Session
+# checkpoints (repro.api.ckpt)
+# ---------------------------------------------------------------------------
+
+def store_blobs(store: "MRBGStore") -> Dict[str, np.ndarray]:
+    """Every array of the store, keyed for one flat ``np.savez``."""
+    blobs = {"idx_batch": store.idx_batch, "idx_start": store.idx_start,
+             "idx_len": store.idx_len}
+    for i, b in enumerate(store.batches):
+        blobs[f"b{i}_k2"] = b.k2
+        blobs[f"b{i}_mk"] = b.mk
+        blobs[f"b{i}_sign"] = b.sign
+        for n, a in b.v2.items():
+            blobs[f"b{i}_v2_{n}"] = a
+    return blobs
+
+
+def store_meta(store: "MRBGStore") -> Dict[str, Any]:
+    """The non-array state needed to rebuild the store around the blobs."""
+    return {"offsets": [b.offset for b in store.batches],
+            "v2_names": sorted({n for b in store.batches for n in b.v2}),
+            "file_records": store.file_records,
+            "live_records": store.live_records,
+            "value_bytes": store.record_bytes - 8,
+            "policy": store.policy}
+
+
+def load_store_state(store: "MRBGStore", npz, meta: Dict[str, Any]) -> None:
+    """Populate a freshly constructed store from store_blobs/store_meta."""
+    names = meta["v2_names"]
+    for i, off in enumerate(meta["offsets"]):
+        v2 = {n: npz[f"b{i}_v2_{n}"] for n in names
+              if f"b{i}_v2_{n}" in npz.files}
+        store.batches.append(_Batch(npz[f"b{i}_k2"], npz[f"b{i}_mk"], v2,
+                                    npz[f"b{i}_sign"], off))
+    store.idx_batch = npz["idx_batch"].copy()
+    store.idx_start = npz["idx_start"].copy()
+    store.idx_len = npz["idx_len"].copy()
+    store.file_records = meta["file_records"]
+    store.live_records = meta["live_records"]
+
+
 def _chunk_spans(sorted_k2: np.ndarray):
     """Return (unique keys, start offsets, lengths) of each chunk."""
     keys, starts = np.unique(sorted_k2, return_index=True)

@@ -1,0 +1,104 @@
+"""Session fault tolerance: checkpoint -> restore -> update(delta) produces
+exactly what the uninterrupted session produces, on both shuffle/reduce
+backends (xla and pallas-interpret)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import RunConfig, Session, make_delta
+from repro.apps import pagerank as pr, wordcount as wc
+
+BACKENDS = ("xla", "pallas")
+
+
+def _wc_delta(docs, row, vocab, seed):
+    new = np.random.default_rng(seed).integers(
+        0, vocab, (1, docs.shape[1])).astype(np.int32)
+    rid = np.array([row, row], np.int32)
+    buf = np.concatenate([docs[[row]], new])
+    return make_delta(rid, {"w": jnp.asarray(buf)},
+                      np.array([-1, 1], np.int8))
+
+
+def _pr_delta(nbrs, rows, seed):
+    rng = np.random.default_rng(seed)
+    k, f = len(rows), nbrs.shape[1]
+    new = np.where(rng.random((k, f)) < 0.5,
+                   rng.integers(0, nbrs.shape[0], (k, f)), -1
+                   ).astype(np.int32)
+    rid = np.repeat(np.asarray(rows, np.int32), 2)
+    buf = np.empty((2 * k, f), np.int32)
+    buf[0::2] = nbrs[rows]
+    buf[1::2] = new
+    return make_delta(rid, {"nbrs": jnp.asarray(buf)},
+                      np.tile(np.array([-1, 1], np.int8), k))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("path", ["mrbg", "accumulator"])
+def test_onestep_roundtrip(tmp_path, backend, path):
+    vocab = 40
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, vocab, (24, 6)).astype(np.int32)
+    cfg = RunConfig(onestep_path=path, value_bytes=4, backend=backend)
+
+    spec, data = wc.make_job(docs, vocab)
+    sess = Session(spec, cfg)
+    sess.run(data)
+    sess.update(_wc_delta(docs, 3, vocab, 1))
+    sess.checkpoint(tmp_path / "ck")
+
+    d2 = _wc_delta(docs, 7, vocab, 2)
+    sess.update(d2)                               # uninterrupted
+
+    restored = Session.restore(spec, tmp_path / "ck", cfg)
+    assert restored.epoch == 1
+    restored.update(d2)                           # resumed
+    assert restored.epoch == 2
+    np.testing.assert_array_equal(restored.result["c"], sess.result["c"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incr_iter_roundtrip(tmp_path, backend):
+    S, F = 48, 3
+    nbrs = pr.random_graph(S, F, seed=1, p_edge=0.4)
+    cfg = RunConfig(max_iters=60, tol=1e-6, value_bytes=4, backend=backend)
+
+    spec, struct = pr.make_job(nbrs)
+    sess = Session(spec, cfg)
+    sess.run(struct)
+    sess.checkpoint(tmp_path / "ck")
+
+    delta = _pr_delta(nbrs, [5, 9], seed=4)
+    rep_live = sess.update(delta)                 # uninterrupted
+
+    restored = Session.restore(spec, tmp_path / "ck", cfg)
+    rep_rest = restored.update(delta)             # resumed
+    assert rep_rest.mode == rep_live.mode
+    assert rep_rest.iters == rep_live.iters
+    np.testing.assert_allclose(restored.result["r"], sess.result["r"],
+                               rtol=1e-6, atol=0)
+
+
+def test_auto_checkpoint_cadence(tmp_path):
+    """RunConfig(checkpoint_dir, checkpoint_every) snapshots inside
+    run/update without explicit checkpoint() calls."""
+    vocab = 40
+    rng = np.random.default_rng(3)
+    docs = rng.integers(0, vocab, (16, 6)).astype(np.int32)
+    spec, data = wc.make_job(docs, vocab)
+    cfg = RunConfig(onestep_path="mrbg", value_bytes=4,
+                    checkpoint_dir=str(tmp_path / "auto"),
+                    checkpoint_every=2)
+    sess = Session(spec, cfg)
+    sess.run(data)                                # epoch 0 -> snapshot
+    sess.update(_wc_delta(docs, 1, vocab, 1))     # epoch 1 -> no snapshot
+    assert (tmp_path / "auto" / "ep_000000").exists()
+    assert not (tmp_path / "auto" / "ep_000001").exists()
+    sess.update(_wc_delta(docs, 2, vocab, 2))     # epoch 2 -> snapshot
+    assert (tmp_path / "auto" / "ep_000002").exists()
+
+    restored = Session.restore(spec, tmp_path / "auto", cfg.replace(
+        checkpoint_dir=None))
+    assert restored.epoch == 2
+    np.testing.assert_array_equal(restored.result["c"], sess.result["c"])

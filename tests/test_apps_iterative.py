@@ -15,7 +15,7 @@ def _update_delta(rows, olds, news, key):
     buf = np.empty((2 * n,) + olds.shape[1:], olds.dtype)
     buf[0::2] = olds
     buf[1::2] = news
-    return make_delta(dk, dk, {key: jnp.asarray(buf)}, sg)
+    return make_delta(dk, {key: jnp.asarray(buf)}, sg)
 
 
 class TestPageRank:
@@ -71,8 +71,8 @@ class TestSSSP:
         nb[0::2] = nbrs[rows]
         nb[1::2] = new_n
         wb = np.repeat(w[rows], 2, axis=0)
-        delta = make_delta(dk, dk, {"nbrs": jnp.asarray(nb),
-                                    "w": jnp.asarray(wb)}, sg)
+        delta = make_delta(dk, {"nbrs": jnp.asarray(nb),
+                                 "w": jnp.asarray(wb)}, sg)
         st, hist = job.refresh(delta, max_iters=150, tol=1e-7,
                                cpc_threshold=0.0)
         nbrs2 = nbrs.copy()
@@ -148,7 +148,7 @@ class TestAPriori:
         job.initial_run(apriori.make_input(np.arange(N), tweets))
         new = rng.integers(0, V, (20, L)).astype(np.int32)
         ids = np.arange(N, N + 20, dtype=np.int32)
-        delta = make_delta(ids, ids, {"w": jnp.asarray(new)},
+        delta = make_delta(ids, {"w": jnp.asarray(new)},
                            np.ones(20, np.int8))
         job.incremental_run(delta)
         want = apriori.oracle(np.concatenate([tweets, new]), pairs)

@@ -18,7 +18,7 @@ def _delta(nbrs, rows, new_rows):
     buf = np.empty((2 * n,) + nbrs.shape[1:], nbrs.dtype)
     buf[0::2] = nbrs[rows]
     buf[1::2] = new_rows
-    return make_delta(dk, dk, {"nbrs": jnp.asarray(buf)}, sg)
+    return make_delta(dk, {"nbrs": jnp.asarray(buf)}, sg)
 
 
 def test_checkpoint_restore_identical_refresh(tmp_path):

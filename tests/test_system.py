@@ -26,7 +26,7 @@ def _update_delta(rows, old_rows, new_rows, values_key="w"):
     buf = np.empty((2 * n,) + old_rows.shape[1:], old_rows.dtype)
     buf[0::2] = old_rows
     buf[1::2] = new_rows
-    return make_delta(dk, dk, {values_key: jnp.asarray(buf)}, sg)
+    return make_delta(dk, {values_key: jnp.asarray(buf)}, sg)
 
 
 class TestIncrementalOneStep:
@@ -60,7 +60,7 @@ class TestIncrementalOneStep:
         # delete doc 0, insert docs 30, 31
         dk = np.array([0, 30, 31], np.int32)
         vals = {"w": jnp.asarray(np.concatenate([docs[[0]], newdocs]))}
-        delta = make_delta(dk, dk, vals, np.array([-1, 1, 1], np.int8))
+        delta = make_delta(dk, vals, np.array([-1, 1, 1], np.int8))
         job.incremental_run(delta)
         valid = np.ones(32, bool)
         valid[0] = False
