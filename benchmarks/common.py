@@ -1,7 +1,6 @@
 """Shared benchmark scaffolding: workloads, deltas, timing, CSV rows."""
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Dict, List
 
@@ -9,18 +8,6 @@ import numpy as np
 import jax.numpy as jnp
 
 ROWS: List[Dict] = []
-
-
-def whitebox(fn: Callable) -> Callable:
-    """Mark a benchmark that deliberately measures the engine internals:
-    its pre-`repro.api` entry-point calls are instrumentation, not legacy
-    user code, so the deprecation shims stay silent."""
-    @functools.wraps(fn)
-    def wrapper(*args, **kw):
-        from repro.core.deprecation import internal_use
-        with internal_use():
-            return fn(*args, **kw)
-    return wrapper
 
 
 def emit(name: str, value: float, derived: str = ""):

@@ -6,12 +6,11 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, graph_update_delta, pagerank_workload, whitebox
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
 from repro.apps import pagerank as pr
 from repro.core.incr_iter import IncrIterJob
 
 
-@whitebox
 def run():
     spec, struct, nbrs = pagerank_workload(s=8192, f=4)
     delta0, nbrs2 = graph_update_delta(nbrs, 0.05)

@@ -4,11 +4,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, graph_update_delta, pagerank_workload, whitebox
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
 from repro.core.incr_iter import IncrIterJob
 
 
-@whitebox
 def run():
     for label, ft, pdelta in (("noCPC", 0.0, 1.01), ("FT0.01", 0.01, 0.5),
                               ("FT0.05", 0.05, 0.5)):

@@ -2,11 +2,10 @@
 experiment's shape: relative advantage grows with structure size)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, pagerank_workload, timed, whitebox
+from benchmarks.common import emit, pagerank_workload, timed
 from repro.core.iterative import State, run_iterative, run_plain
 
 
-@whitebox
 def run():
     for label, s in (("xs", 2048), ("s", 8192), ("m", 32768)):
         spec, struct, nbrs = pagerank_workload(s=s, f=4, p_edge=0.5)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, graph_update_delta, timed, whitebox
+from benchmarks.common import emit, graph_update_delta, timed
 from repro.core.incr_iter import IncrIterJob
 from repro.core.incremental import make_delta
 from repro.core.iterative import State, run_iterative, run_plain
@@ -58,7 +58,6 @@ def _bench(name, spec, struct_fn, delta_fn, tol, cpc, value_bytes=8):
          f"work_saving={work_plain/max(work_i2,1):.1f}x,mode={mode}")
 
 
-@whitebox
 def run():
     # ---- PageRank (one-to-one) ----
     from repro.apps import pagerank as pr

@@ -8,13 +8,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, graph_update_delta, pagerank_workload, whitebox
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
 from repro.core.incr_iter import IncrIterJob, _delta_map_iter
 from repro.core.iterative import State
 from repro.core.kvstore import KV, segment_reduce, sort_edges
 
 
-@whitebox
 def run():
     spec, struct, nbrs = pagerank_workload(s=8192, f=4)
     job = IncrIterJob(spec, struct, value_bytes=8)

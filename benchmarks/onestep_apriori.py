@@ -8,7 +8,6 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timed
 from repro.api import RunConfig, Session, make_delta
 from repro.apps import apriori
-from repro.core.deprecation import internal_use
 from repro.core.engine import run_onestep
 
 
@@ -33,11 +32,11 @@ def run():
     session.update(delta)
     all_tweets = np.concatenate([tweets, new])
     inp = apriori.make_input(np.arange(N + dn), all_tweets)
-    with internal_use():                 # raw recompute baseline (whitebox)
-        run_onestep(spec, inp)
-        _, t_recomp = timed(lambda: run_onestep(spec, inp)
-                            .results.values["c"].block_until_ready(),
-                            repeat=3)
+    # raw recompute baseline (whitebox: measures the engine internals)
+    run_onestep(spec, inp)
+    _, t_recomp = timed(lambda: run_onestep(spec, inp)
+                        .results.values["c"].block_until_ready(),
+                        repeat=3)
 
     session2 = Session(spec, RunConfig(onestep_path="accumulator"))
     session2.run(inp0)

@@ -1,0 +1,102 @@
+"""Streaming serving benchmark: sustained updates/sec + refresh-latency
+percentiles through `repro.stream.StreamSession`, per backend.
+
+Two workloads cover both engine families, via the same app adapters the
+examples use: wordcount (one-step / accumulator refresh) and incremental
+PageRank (iterative refresh with CPC).  Results land in
+``BENCH_stream.json``:
+
+    PYTHONPATH=src:. python benchmarks/stream_latency.py            # full
+    PYTHONPATH=src:. python benchmarks/stream_latency.py --tiny     # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import RunConfig, StreamConfig
+from repro.apps import pagerank as pr, wordcount as wc
+from repro.stream import StreamSession
+
+
+def _serve(name: str, spec, data, source, config, stream) -> dict:
+    ss = StreamSession(spec, data, source=source, config=config,
+                       stream=stream)
+    with ss:
+        ss.drain(timeout=1200)
+    m = ss.metrics.snapshot()
+    actions = {d.action for d in ss.scheduler.decisions}
+    emit(f"{name}.updates_per_sec", m["updates_per_sec"],
+         f"batches={m['batches']},rows={m['rows_in']},actions={sorted(actions)}")
+    emit(f"{name}.refresh_p50_ms", m["refresh_p50_ms"],
+         f"p95={m['refresh_p95_ms']:.2f}ms")
+    emit(f"{name}.latency_p50_ms", m["latency_p50_ms"],
+         f"p95={m['latency_p95_ms']:.2f}ms")
+    return {"updates_per_sec": m["updates_per_sec"],
+            "refresh_p50_ms": m["refresh_p50_ms"],
+            "refresh_p95_ms": m["refresh_p95_ms"],
+            "latency_p50_ms": m["latency_p50_ms"],
+            "latency_p95_ms": m["latency_p95_ms"],
+            "batches": m["batches"], "rows_in": m["rows_in"],
+            "coalesce_savings": m["coalesce_savings"],
+            "refreshes": m["refreshes"]}
+
+
+def run_backend(backend: str, tiny: bool) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    n_docs, vocab, epochs = (64, 32, 3) if tiny else (1024, 512, 6)
+    docs = rng.integers(0, vocab, (n_docs, 8)).astype(np.int32)
+    spec, data, source = wc.make_stream(docs, vocab, frac=0.05, seed=1,
+                                        epochs=epochs)
+    out["wordcount"] = _serve(
+        f"stream.wordcount.{backend}", spec, data, source,
+        RunConfig(backend=backend, value_bytes=4),
+        StreamConfig(max_batch_records=2 * max(1, int(n_docs * 0.05)),
+                     max_batch_delay=0.005, policy="latency"))
+
+    s = 128 if tiny else 1024
+    nbrs = pr.random_graph(s, 4, seed=3, p_edge=0.5)
+    spec, struct, source = pr.make_stream(nbrs, frac=0.02, seed=5,
+                                          epochs=epochs)
+    out["pagerank"] = _serve(
+        f"stream.pagerank.{backend}", spec, struct, source,
+        RunConfig(backend=backend, max_iters=120, tol=1e-6,
+                  refresh_max_iters=60, cpc_threshold=0.01, value_bytes=4),
+        StreamConfig(max_batch_records=2 * max(1, int(s * 0.02)),
+                     max_batch_delay=0.005, policy="latency"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "both"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_stream.json here (default: only when "
+                         "running --backend both full-size)")
+    args = ap.parse_args()
+
+    backends = (("xla", "pallas") if args.backend == "both"
+                else (args.backend,))
+    results = {"platform": jax.default_backend(),
+               "note": "CPU wall-clock; pallas runs in interpret mode off-TPU",
+               "tiny": args.tiny, "backends": {}}
+    for bk in backends:
+        results["backends"][bk] = run_backend(bk, args.tiny)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

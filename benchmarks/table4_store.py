@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, graph_update_delta, pagerank_workload, whitebox
+from benchmarks.common import emit, graph_update_delta, pagerank_workload
 from repro.core.incr_iter import IncrIterJob
 from repro.core.mrbg_store import POLICIES
 
@@ -27,7 +27,6 @@ def _one(policy, warm_only=False):
     return dt, reads, rbytes
 
 
-@whitebox
 def run():
     _one("multi-dynamic-window")          # warm all jit caches once
     for policy in POLICIES:

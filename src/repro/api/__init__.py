@@ -18,7 +18,7 @@ execution via ``RunConfig(mesh=...)``; the engine picks the refresh path
 (fine-grain MRBGraph merge, accumulator fast path, CPC-filtered delta
 propagation, or auto MRBG-off fallback recomputation) internally.
 """
-from repro.api.config import RunConfig
+from repro.api.config import RunConfig, StreamConfig
 from repro.api.report import MODES, RunReport
 from repro.api.session import Session
 
@@ -32,7 +32,7 @@ from repro.core.kvstore import (
 )
 
 __all__ = [
-    "Session", "RunConfig", "RunReport", "MODES",
+    "Session", "RunConfig", "StreamConfig", "RunReport", "MODES",
     "JobSpec", "IterSpec", "State", "default_difference",
     "DeltaKV", "make_delta",
     "KV", "Edges", "Reducer", "make_kv", "make_edges",

@@ -23,7 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import RunConfig
-from repro.core.deprecation import internal_use
 from repro.core.incremental import ResultView
 from repro.core.iterative import State
 from repro.core.mrbg_store import (
@@ -102,8 +101,7 @@ def save_session(session, root: str) -> Path:
 
     if drv.kind == "incr-iter":
         from repro.core.ft import checkpoint_job
-        with internal_use():
-            out = checkpoint_job(drv.job, root, session.epoch)
+        out = checkpoint_job(drv.job, root, session.epoch)
     elif drv.kind == "onestep-mrbg":
         tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
         view = drv.view
@@ -168,8 +166,7 @@ def load_session(cls, spec, root: str, config: Optional[RunConfig]):
 
     if kind == "incr-iter":
         from repro.core.ft import restore_job
-        with internal_use():
-            job = restore_job(spec, root)
+        job = restore_job(spec, root)
         # re-apply the session's config on the restored engine objects
         job.backend = cfg.backend
         job.cpc_threshold = cfg.cpc_threshold

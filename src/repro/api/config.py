@@ -69,6 +69,10 @@ class RunConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
 
+    # -- telemetry: RunReports kept on Session.history (the raw material
+    #    for the streaming layer's online refresh-cost models)
+    report_history: int = 64
+
     def __post_init__(self):
         if self.onestep_path not in ONESTEP_PATHS:
             raise ValueError(
@@ -78,6 +82,9 @@ class RunConfig:
             raise ValueError(
                 f"store_policy must be one of {POLICIES}, "
                 f"got {self.store_policy!r}")
+        if self.report_history < 1:
+            raise ValueError("report_history must be >= 1 (the trim in "
+                             "Session._finish keeps the newest reports)")
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
@@ -96,3 +103,50 @@ class RunConfig:
         return {"gap_threshold": self.gap_threshold,
                 "cache_bytes": self.cache_bytes,
                 "fix_window_bytes": self.fix_window_bytes}
+
+
+STREAM_POLICIES = ("latency", "throughput", "paper")
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the ``repro.stream`` serving layer (one per StreamSession).
+
+    Micro-batching trades refresh latency against per-record overhead; the
+    scheduler policy decides, per micro-batch, between the fine-grain
+    incremental refresh and full re-computation (the paper's Fig. 8
+    crossover, applied online).
+    """
+
+    # -- micro-batching: a refresh fires when ``max_batch_records`` delta
+    #    rows are buffered or ``max_batch_delay`` seconds elapsed since the
+    #    first buffered row, whichever comes first
+    max_batch_records: int = 4096
+    max_batch_delay: float = 0.05
+
+    # -- ingestion: bounded buffer between producers and the refresh
+    #    driver; a full buffer blocks submit() (backpressure)
+    queue_capacity: int = 64
+    poll_interval: float = 0.002       # idle sleep between source polls
+
+    # -- coalescer: merge/cancel opposing +/- rows per record before the
+    #    engine sees them (False streams raw rows through)
+    coalesce: bool = True
+
+    # -- refresh scheduling
+    policy: str = "paper"              # latency | throughput | paper
+    crossover: float = 0.25            # |Δ|/|D| where full recompute wins
+    cost_ema: float = 0.5              # EWMA factor of online cost estimates
+    store_bloat: float = 4.0           # throughput: rerun when file/live > x
+
+    def __post_init__(self):
+        if self.policy not in STREAM_POLICIES:
+            raise ValueError(
+                f"policy must be one of {STREAM_POLICIES}, "
+                f"got {self.policy!r}")
+        if self.queue_capacity < 1 or self.max_batch_records < 1:
+            raise ValueError("queue_capacity and max_batch_records must "
+                             "be >= 1")
+
+    def replace(self, **kw) -> "StreamConfig":
+        return dataclasses.replace(self, **kw)

@@ -19,8 +19,8 @@ shard_map + all_to_all engine of §4.3.
 
 The historical entry points (``run_onestep``, ``IncrementalJob``,
 ``run_iterative``/``run_plain``, ``IncrIterJob``, ``run_distributed``,
-``AccumulatorJob``, ``checkpoint_job``/``restore_job``) remain as the
-internal implementation and emit a DeprecationWarning when called directly.
+``AccumulatorJob``, ``checkpoint_job``/``restore_job``) are the internal
+implementation that the Session drives; they carry no API stability promise.
 """
 from __future__ import annotations
 
@@ -34,7 +34,6 @@ import numpy as np
 
 from repro.api.config import RunConfig
 from repro.api.report import RunReport
-from repro.core.deprecation import internal_use
 from repro.core.engine import JobSpec, run_onestep
 from repro.core.incremental import (
     DeltaKV, ResultView, _v2_dict, apply_delta_host, incremental_onestep,
@@ -54,27 +53,31 @@ class Session:
         self.config = config or RunConfig()
         self.epoch = -1                     # becomes 0 on run()
         self._last: Optional[RunReport] = None
+        # bounded RunReport history (oldest first) — the raw material for
+        # online refresh-cost models (repro.stream.RefreshScheduler)
+        self.history: list = []
+        self._driver = self._make_driver()
+
+    def _make_driver(self):
+        spec, config = self.spec, self.config
         if isinstance(spec, JobSpec):
-            if self.config.mesh is not None:
+            if config.mesh is not None:
                 raise ValueError(
                     "distributed execution currently requires an IterSpec "
                     "(one-step jobs have no structure/state co-partitioning)")
-            path = self.config.onestep_path
+            path = config.onestep_path
             if path == "auto":
                 path = ("accumulator" if spec.reducer.invertible else "mrbg")
-            self._driver = (_OneStepAccumulator(spec, self.config)
-                            if path == "accumulator"
-                            else _OneStepMRBG(spec, self.config))
+            return (_OneStepAccumulator(spec, config)
+                    if path == "accumulator" else _OneStepMRBG(spec, config))
         elif isinstance(spec, IterSpec):
-            if self.config.mesh is not None:
-                self._driver = _Distributed(spec, self.config)
-            elif self.config.plain_shuffle:
-                self._driver = _PlainIter(spec, self.config)
-            else:
-                self._driver = _IncrIter(spec, self.config)
-        else:
-            raise TypeError(f"spec must be JobSpec or IterSpec, "
-                            f"got {type(spec).__name__}")
+            if config.mesh is not None:
+                return _Distributed(spec, config)
+            elif config.plain_shuffle:
+                return _PlainIter(spec, config)
+            return _IncrIter(spec, config)
+        raise TypeError(f"spec must be JobSpec or IterSpec, "
+                        f"got {type(spec).__name__}")
 
     # -- lifecycle ---------------------------------------------------------
     def run(self, data: KV) -> RunReport:
@@ -97,12 +100,34 @@ class Session:
         self.epoch += 1
         return self._finish(t0)
 
+    def rerun(self, data: KV) -> RunReport:
+        """Full re-computation refresh: drop every preserved structure and
+        recompute from scratch on the (fully updated) input, as one more
+        epoch of this session.
+
+        This is the scheduler's alternative to ``update(delta)`` once |Δ|
+        grows past the paper's Fig. 8 crossover — the same decision the
+        engine takes internally for iterative jobs (§5.2 MRBG-off), exposed
+        at the session level so a serving layer can take it per micro-batch.
+        """
+        if self.epoch < 0:
+            raise RuntimeError("rerun() before run(); execute the initial "
+                               "job first")
+        t0 = time.perf_counter()
+        self._driver = self._make_driver()   # fresh preserved state
+        self._driver.run(data)
+        self.epoch += 1
+        return self._finish(t0)
+
     def _finish(self, t0: float) -> RunReport:
         # skip the dense result copy here: each epoch would otherwise pay
         # an O(|D|) device->host transfer even when nobody reads it
         rep = self.report(include_result=False)
         rep.seconds = time.perf_counter() - t0
         self._last = rep
+        self.history.append(rep)
+        if len(self.history) > self.config.report_history:
+            del self.history[:-self.config.report_history]
         cfg = self.config
         if (cfg.checkpoint_dir is not None and cfg.checkpoint_every > 0
                 and self.epoch % cfg.checkpoint_every == 0):
@@ -162,6 +187,28 @@ class Session:
     def state(self) -> Optional[State]:
         return getattr(self._driver, "state", None)
 
+    # -- preserved-state accounting (serving-layer hooks) ------------------
+    @property
+    def store(self) -> Optional[MRBGStore]:
+        """The driver's MRBG-Store, if this execution path preserves one."""
+        drv = self._driver
+        st = getattr(drv, "store", None)
+        if st is None:
+            st = getattr(getattr(drv, "job", None), "store", None)
+        return st
+
+    def store_bytes(self) -> int:
+        """MRBG file size including obsolete chunks (0 if no store)."""
+        st = self.store
+        return st.file_bytes() if st is not None else 0
+
+    def compact_store(self) -> int:
+        """Offline MRBG compaction; returns the bytes reclaimed.  The
+        multi-tenant server calls this on the fattest session when the
+        shared store budget is exceeded."""
+        st = self.store
+        return st.compact() if st is not None else 0
+
 
 # ---------------------------------------------------------------------------
 # Drivers: one per engine path; each owns the preserved state
@@ -187,9 +234,8 @@ class _OneStepMRBG:
         return ops.resolve_backend(self.cfg.backend)
 
     def run(self, inp: KV) -> None:
-        with internal_use():
-            res = run_onestep(self.spec, inp, preserve=True,
-                              backend=self.cfg.backend)
+        res = run_onestep(self.spec, inp, preserve=True,
+                          backend=self.cfg.backend)
         host = edges_to_host(res.edges)
         self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
         self.view = ResultView.from_job(self.spec.num_keys, res.results,
@@ -226,8 +272,7 @@ class _OneStepAccumulator:
         from repro.core.accumulator import AccumulatorJob
         self.spec = spec
         self.cfg = cfg
-        with internal_use():
-            self.job = AccumulatorJob(spec, backend=cfg.backend)
+        self.job = AccumulatorJob(spec, backend=cfg.backend)
         self.mode = "onestep"
 
     @property
@@ -278,14 +323,13 @@ class _IncrIter:
 
     def _make_job(self, struct: KV):
         from repro.core.incr_iter import IncrIterJob
-        with internal_use():
-            return IncrIterJob(
-                struct=struct, spec=self.spec,
-                value_bytes=self.cfg.value_bytes,
-                policy=self.cfg.store_policy,
-                cpc_threshold=self.cfg.cpc_threshold,
-                pdelta_threshold=self.cfg.pdelta_threshold,
-                backend=self.cfg.backend, store_kw=self.cfg.store_kw())
+        return IncrIterJob(
+            struct=struct, spec=self.spec,
+            value_bytes=self.cfg.value_bytes,
+            policy=self.cfg.store_policy,
+            cpc_threshold=self.cfg.cpc_threshold,
+            pdelta_threshold=self.cfg.pdelta_threshold,
+            backend=self.cfg.backend, store_kw=self.cfg.store_kw())
 
     def run(self, struct: KV) -> None:
         self.job = self._make_job(struct)
@@ -352,10 +396,9 @@ class _PlainIter:
                   jnp.asarray(self._valid))
 
     def _converge(self, max_iters: int, tol: float) -> None:
-        with internal_use():
-            self.state, hist = run_plain(self.spec, self._struct_kv(), None,
-                                         max_iters=max_iters, tol=tol,
-                                         backend=self.cfg.backend)
+        self.state, hist = run_plain(self.spec, self._struct_kv(), None,
+                                     max_iters=max_iters, tol=tol,
+                                     backend=self.cfg.backend)
         self._iters = hist["iters"]
         self._max_change = hist["max_change"]
 
@@ -428,12 +471,11 @@ class _Distributed:
         parts = partition_struct(self.spec, self._keys, self._values,
                                  self._valid, self.n_parts,
                                  self._partition_cap())
-        with internal_use():
-            out, hist = run_distributed(
-                self.spec, self.cfg.mesh, parts, self.state_parts,
-                axis=self.cfg.mesh_axis, pod_axis=self.cfg.pod_axis,
-                shuffle_cap=self.cfg.shuffle_cap, max_iters=max_iters,
-                tol=tol, backend=self.cfg.backend)
+        out, hist = run_distributed(
+            self.spec, self.cfg.mesh, parts, self.state_parts,
+            axis=self.cfg.mesh_axis, pod_axis=self.cfg.pod_axis,
+            shuffle_cap=self.cfg.shuffle_cap, max_iters=max_iters,
+            tol=tol, backend=self.cfg.backend)
         self.state_parts = {n: np.asarray(a) for n, a in out.items()}
         self._iters = hist["iters"]
         self._max_change = hist["max_change"]

@@ -56,6 +56,30 @@ def make_job(nbrs: np.ndarray, valid_rows=None):
     return make_spec(nbrs.shape[0]), make_struct(nbrs, valid_rows)
 
 
+def graph_mutator(num_vertices: int, p_edge: float = 0.5):
+    """Evolving-graph mutator: rewire the selected vertices' out-edges."""
+    def mut(rng, rows, old):
+        shape = old["nbrs"].shape
+        return {"nbrs": np.where(rng.random(shape) < p_edge,
+                                 rng.integers(0, num_vertices, shape),
+                                 -1).astype(np.int32)}
+    return mut
+
+
+def make_stream(nbrs: np.ndarray, frac: float = 0.02, seed: int = 7,
+                epochs: int = 3, p_edge: float = 0.5):
+    """Streaming app entry: ``(spec, struct, source)`` ready for
+    ``repro.stream.StreamSession`` — one synthetic delta epoch rewires
+    ``frac`` of the vertices; ``source.values["nbrs"]`` tracks the
+    fully-updated graph for oracle checks."""
+    from repro.stream.source import SyntheticSource
+    spec, struct = make_job(nbrs)
+    source = SyntheticSource({"nbrs": np.asarray(nbrs, np.int32)},
+                             frac=frac, seed=seed, epochs=epochs,
+                             mutator=graph_mutator(nbrs.shape[0], p_edge))
+    return spec, struct, source
+
+
 def oracle(nbrs: np.ndarray, valid_rows=None, iters: int = 200,
            tol: float = 1e-12) -> np.ndarray:
     """Dense numpy power iteration with identical semantics."""

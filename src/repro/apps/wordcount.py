@@ -40,6 +40,28 @@ def make_job(docs: np.ndarray, vocab: int, doc_ids=None, valid=None):
     return make_spec(vocab), make_input(doc_ids, docs, valid)
 
 
+def doc_mutator(vocab: int):
+    """Evolving-corpus mutator: rewrite the selected documents."""
+    def mut(rng, rows, old):
+        return {"w": rng.integers(0, vocab,
+                                  old["w"].shape).astype(np.int32)}
+    return mut
+
+
+def make_stream(docs: np.ndarray, vocab: int, frac: float = 0.05,
+                seed: int = 0, epochs: int = 5):
+    """Streaming app entry: ``(spec, data, source)`` ready for
+    ``repro.stream.StreamSession`` — one synthetic delta epoch rewrites
+    ``frac`` of the corpus; ``source.values["w"]`` tracks the
+    fully-updated corpus for oracle checks."""
+    from repro.stream.source import SyntheticSource
+    spec, data = make_job(docs, vocab)
+    source = SyntheticSource({"w": np.asarray(docs, np.int32)}, frac=frac,
+                             seed=seed, epochs=epochs,
+                             mutator=doc_mutator(vocab))
+    return spec, data, source
+
+
 def oracle(docs: np.ndarray, vocab: int, valid=None) -> np.ndarray:
     counts = np.zeros(vocab)
     for i, d in enumerate(docs):

@@ -90,9 +90,6 @@ class AccumulatorJob:
     """
 
     def __init__(self, spec: JobSpec, backend=None):
-        from repro.core.deprecation import warn_deprecated
-        warn_deprecated("repro.core.accumulator.AccumulatorJob",
-                        "repro.api.Session")
         if not (spec.reducer.invertible or spec.reducer.kind in
                 ("min", "max", "sum", "mean")):
             raise ValueError("reducer is not accumulative")

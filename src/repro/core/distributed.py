@@ -33,7 +33,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.deprecation import warn_deprecated
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, finalize_reduce, segment_reduce,
 )
@@ -219,11 +218,9 @@ def run_distributed(spec: IterSpec, mesh: Mesh, struct_parts, state_parts,
                     tol: float = 1e-6, backend: Optional[str] = None):
     """Drive the distributed prime loop to convergence.
 
-    Deprecated as a user entry point: use ``repro.api.Session`` with
-    ``RunConfig(mesh=...)``.
+    Engine-internal: user code drives this through ``repro.api.Session``
+    with ``RunConfig(mesh=...)``.
     """
-    warn_deprecated("repro.core.distributed.run_distributed",
-                    "repro.api.Session with RunConfig(mesh=...)")
     step = make_distributed_step(spec, mesh, axis, shuffle_cap,
                                  pod_axis=pod_axis, backend=backend)
     skeys, svals, svalid = struct_parts

@@ -26,7 +26,6 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.deprecation import warn_deprecated
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, make_kv, segment_reduce, sort_edges,
 )
@@ -83,10 +82,8 @@ def run_onestep(spec: JobSpec, inp: KV, *, preserve: bool = False,
     overrides the shuffle/reduce backend (resolved outside the jit so that
     switching backends retraces).
 
-    Deprecated as a user entry point: drive jobs through
-    ``repro.api.Session`` instead.
+    Engine-internal: user code drives jobs through ``repro.api.Session``.
     """
-    warn_deprecated("repro.core.engine.run_onestep", "repro.api.Session.run")
     spec_static = (spec.map_fn, spec.reducer, spec.num_keys,
                    ops.resolve_backend(backend))
     sign = jnp.ones(inp.capacity, jnp.int8)

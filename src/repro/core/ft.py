@@ -26,7 +26,6 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.incr_iter import IncrIterJob
 from repro.core.iterative import IterSpec, State
 from repro.core.mrbg_store import (
@@ -37,8 +36,6 @@ import jax.numpy as jnp
 
 
 def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
-    warn_deprecated("repro.core.ft.checkpoint_job",
-                    "repro.api.Session.checkpoint")
     rootp = Path(root)
     rootp.mkdir(parents=True, exist_ok=True)
     tmp = rootp / f"it_{iteration:06d}.tmp"
@@ -68,7 +65,6 @@ def checkpoint_job(job: IncrIterJob, root: str, iteration: int) -> Path:
 
 def restore_job(spec: IterSpec, root: str,
                 iteration: Optional[int] = None) -> IncrIterJob:
-    warn_deprecated("repro.core.ft.restore_job", "repro.api.Session.restore")
     rootp = Path(root)
     its = sorted(rootp.glob("it_??????"))
     assert its, "no checkpoints"
@@ -81,9 +77,8 @@ def restore_job(spec: IterSpec, root: str,
     struct = make_kv(st["struct_keys"],
                      {k: jnp.asarray(v) for k, v in struct_vals.items()},
                      st["struct_valid"])
-    with internal_use():
-        job = IncrIterJob(spec, struct, value_bytes=meta["value_bytes"],
-                          policy=meta["policy"])
+    job = IncrIterJob(spec, struct, value_bytes=meta["value_bytes"],
+                      policy=meta["policy"])
     sv = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("sv_")}
     ev = {k[3:]: jnp.asarray(st[k]) for k in st.files if k.startswith("ev_")}
     job.state = State(sv, jnp.ones(spec.num_state, jnp.bool_))

@@ -33,7 +33,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.incremental import (
     DeltaKV, _merge_reduce, _pad_edges, apply_delta_host,
 )
@@ -70,8 +69,6 @@ class IncrIterJob:
                  pdelta_threshold: float = 0.5,
                  backend: Optional[str] = None,
                  store_kw: Optional[Dict[str, Any]] = None):
-        warn_deprecated("repro.core.incr_iter.IncrIterJob",
-                        "repro.api.Session")
         self.spec = spec
         self.backend = backend
         self.cpc_threshold = cpc_threshold
@@ -128,11 +125,10 @@ class IncrIterJob:
     # ------------------------------------------------------------------
     def initial_converge(self, *, max_iters: int = 100, tol: float = 1e-4):
         """Job A_0: full iterative run; preserve final-iteration MRBGraph."""
-        with internal_use():
-            state, hist = run_iterative(self.spec, self._struct_kv(), None,
-                                        max_iters=max_iters, tol=tol,
-                                        preserve_last=True,
-                                        backend=self.backend)
+        state, hist = run_iterative(self.spec, self._struct_kv(), None,
+                                    max_iters=max_iters, tol=tol,
+                                    preserve_last=True,
+                                    backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self._preserve(hist["last_edges"])
@@ -314,11 +310,10 @@ class IncrIterJob:
     def _fallback_iterate(self, max_iters: int, tol: float):
         """iterMR mode from the current state; rebuild MRBGraph at the end."""
         t0 = time.perf_counter()
-        with internal_use():
-            state, hist = run_iterative(self.spec, self._struct_kv(),
-                                        self.state, max_iters=max_iters,
-                                        tol=tol, preserve_last=True,
-                                        backend=self.backend)
+        state, hist = run_iterative(self.spec, self._struct_kv(),
+                                    self.state, max_iters=max_iters,
+                                    tol=tol, preserve_last=True,
+                                    backend=self.backend)
         self.state = state
         self.emitted_values = dict(state.values)
         self.store = MRBGStore(self.spec.num_state,

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.engine import JobSpec, run_onestep
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce, make_kv,
@@ -56,24 +55,16 @@ class DeltaKV(NamedTuple):
         return self.keys.shape[0]
 
 
-def make_delta(record_ids, values=None, sign=None, keys=None,
+def make_delta(record_ids, values, sign, *, keys=None,
                valid=None) -> DeltaKV:
     """Build a :class:`DeltaKV`.
 
     ``keys`` (the semantic K1) defaults to ``record_ids`` — for every engine
     app the Map-instance identity *is* the record key, so the historical
-    ``make_delta(rid, rid, ...)`` spelling is no longer needed.
-
-    The pre-``repro.api`` argument order ``(keys, record_ids, values, sign)``
-    is still accepted (detected by the values pytree arriving in the ``sign``
-    slot) with a DeprecationWarning.
+    ``make_delta(rid, rid, ...)`` spelling is no longer needed (and the
+    pre-``repro.api`` positional order is no longer accepted: ``keys`` and
+    ``valid`` are keyword-only).
     """
-    if isinstance(sign, dict) and not isinstance(values, dict):
-        # legacy positional order: (keys, record_ids, values, sign)
-        from repro.core.deprecation import warn_deprecated
-        warn_deprecated("make_delta(keys, record_ids, values, sign)",
-                        "make_delta(record_ids, values, sign[, keys=...])")
-        record_ids, values, sign, keys = values, sign, keys, record_ids
     record_ids = jnp.asarray(record_ids, jnp.int32)
     if keys is None:
         keys = record_ids
@@ -149,8 +140,6 @@ class IncrementalJob:
     def __init__(self, spec: JobSpec, value_bytes: int = 8,
                  policy: str = "multi-dynamic-window",
                  backend: Optional[str] = None):
-        warn_deprecated("repro.core.incremental.IncrementalJob",
-                        "repro.api.Session")
         self.spec = spec
         self.backend = backend
         self.store = MRBGStore(spec.num_keys, value_bytes, policy=policy)
@@ -158,9 +147,8 @@ class IncrementalJob:
 
     # -- initial run -------------------------------------------------------
     def initial_run(self, inp: KV) -> ResultView:
-        with internal_use():
-            res = run_onestep(self.spec, inp, preserve=True,
-                              backend=self.backend)
+        res = run_onestep(self.spec, inp, preserve=True,
+                          backend=self.backend)
         host = edges_to_host(res.edges)
         self.store.append(host["k2"], host["mk"], _v2_dict(host["v2"]))
         self.view = ResultView.from_job(self.spec.num_keys, res.results,

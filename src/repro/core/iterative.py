@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.deprecation import internal_use, warn_deprecated
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, segment_reduce, sort_edges,
 )
@@ -120,10 +119,8 @@ def run_iterative(spec: IterSpec, struct: KV, state: Optional[State] = None,
     Returns (state, history dict).  ``preserve_last`` additionally returns the
     final iteration's MRBGraph edges (to seed incremental jobs, Section 5.1).
 
-    Deprecated as a user entry point: use ``repro.api.Session.run``.
+    Engine-internal: user code drives jobs through ``repro.api.Session``.
     """
-    warn_deprecated("repro.core.iterative.run_iterative",
-                    "repro.api.Session.run")
     if state is None:
         state = State.init(spec)
     diff_fn = spec.difference
@@ -159,10 +156,8 @@ def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
     of Algorithm 5 / HaLoop).  Used by the benchmark harness for the cost
     comparison; results are identical to :func:`run_iterative`.
 
-    Deprecated as a user entry point: use ``repro.api.Session`` with
-    ``RunConfig(plain_shuffle=True)``."""
-    warn_deprecated("repro.core.iterative.run_plain",
-                    "repro.api.Session with RunConfig(plain_shuffle=True)")
+    Engine-internal: user code drives this through ``repro.api.Session``
+    with ``RunConfig(plain_shuffle=True)``."""
     def on_it(it, st, ch):
         # the extra structure shuffle: sort structure kv-pairs by key and
         # gather every value column through the permutation
@@ -172,5 +167,4 @@ def run_plain(spec: IterSpec, struct: KV, state: Optional[State] = None,
                          if hasattr(a, 'block_until_ready') else a,
                          res.payload)
     kw.setdefault("on_iteration", on_it)
-    with internal_use():
-        return run_iterative(spec, struct, state, **kw)
+    return run_iterative(spec, struct, state, **kw)

@@ -299,15 +299,17 @@ class MRBGStore:
         return out_k2, out_mk, out_v2
 
     # -- maintenance ------------------------------------------------------
-    def compact(self) -> None:
+    def compact(self) -> int:
         """Offline reconstruction (paper: 'the MRBGraph file is reconstructed
         off-line when the worker is idle'): rewrite a single batch holding
-        only the latest version of every chunk."""
+        only the latest version of every chunk.  Returns the file bytes
+        reclaimed (the multi-tenant server's budget enforcement unit)."""
+        before = self.file_bytes()
         live = np.nonzero(self.idx_batch >= 0)[0]
         if live.size == 0:
             self.batches = []
             self.file_records = 0
-            return
+            return before
         k2, mk, v2, _ = self.query(live)
         self.batches = []
         self.file_records = 0
@@ -315,6 +317,7 @@ class MRBGStore:
         self.idx_len[:] = 0
         self.live_records = 0
         self.append(k2, mk, v2)
+        return before - self.file_bytes()
 
     @property
     def n_batches(self) -> int:
@@ -325,6 +328,10 @@ class MRBGStore:
 
     def live_bytes(self) -> int:
         return self.live_records * self.record_bytes
+
+    def obsolete_bytes(self) -> int:
+        """Bytes held by superseded chunk versions (reclaimable)."""
+        return (self.file_records - self.live_records) * self.record_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,50 @@
+"""repro.stream — continuous-ingestion serving layer over ``repro.api``.
+
+The paper's premise is that "new data and updates are constantly arriving";
+the engine below this package refreshes a preserved job against one delta
+at a time.  This layer closes the loop:
+
+  * :mod:`repro.stream.source`    — ``DeltaSource``: timestamped signed
+    delta records with epoch watermarks (in-memory queue, replayable JSONL
+    tail, synthetic generator).
+  * :mod:`repro.stream.coalesce`  — micro-batch coalescer: merges/cancels
+    opposing +/- rows per record *before* the engine sees them (the sort
+    and segment-sum ride ``repro.kernels.ops``, so the hot path follows
+    the backend dispatcher).
+  * :mod:`repro.stream.scheduler` — cost-model-driven choice between the
+    fine-grain incremental ``update()`` and full ``rerun()`` re-computation
+    per micro-batch (the paper's Fig. 8 crossover as an online policy).
+  * :mod:`repro.stream.session`   — ``StreamSession``: async driver with a
+    bounded ingest queue (backpressure), ``drain``/``stop``/``snapshot``.
+  * :mod:`repro.stream.server`    — ``MultiSessionServer``: many tenant
+    StreamSessions time-sliced over one process under a shared MRBG-store
+    byte budget.
+  * :mod:`repro.stream.metrics`   — per-tenant counters, sustained
+    updates/sec, refresh-latency percentiles.
+
+    from repro.stream import StreamSession
+    from repro.apps import pagerank as pr
+
+    spec, data, source = pr.make_stream(nbrs, frac=0.02, epochs=10)
+    with StreamSession(spec, data, source=source) as ss:
+        ss.drain()
+    ss.result["r"]                       # == cold run on the final input
+"""
+from repro.api.config import STREAM_POLICIES, StreamConfig
+from repro.stream.coalesce import CoalesceResult, coalesce, coalesce_rows
+from repro.stream.metrics import StreamMetrics
+from repro.stream.scheduler import RefreshDecision, RefreshScheduler
+from repro.stream.server import MultiSessionServer
+from repro.stream.session import StreamSession
+from repro.stream.source import (
+    DeltaRecord, DeltaSource, FileTailSource, QueueSource, SyntheticSource,
+)
+
+__all__ = [
+    "StreamConfig", "STREAM_POLICIES",
+    "DeltaRecord", "DeltaSource", "QueueSource", "FileTailSource",
+    "SyntheticSource",
+    "CoalesceResult", "coalesce", "coalesce_rows",
+    "RefreshScheduler", "RefreshDecision",
+    "StreamSession", "MultiSessionServer", "StreamMetrics",
+]

@@ -1,0 +1,301 @@
+"""StreamSession: the async serving driver over one ``repro.api.Session``.
+
+One thread owns the engine; producers push signed delta rows through a
+bounded queue (blocking ``submit`` = backpressure) and/or a
+:class:`repro.stream.DeltaSource` is polled.  Rows are micro-batched
+(``StreamConfig.max_batch_records`` / ``max_batch_delay``), coalesced, and
+applied through whichever refresh path the :class:`RefreshScheduler`
+picks — fine-grain incremental ``update()`` or full ``rerun()`` on the
+maintained input mirror.  ``drain()`` blocks until every available row is
+reflected in ``result``; ``snapshot()`` checkpoints the session together
+with the stream watermark so a replayable source can resume after
+recovery.
+"""
+from __future__ import annotations
+
+import json
+import queue as queue_mod
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import RunConfig, StreamConfig
+from repro.api.session import Session, Spec
+from repro.core.incremental import apply_delta_host, make_delta
+from repro.core.kvstore import KV
+from repro.stream.coalesce import CoalesceResult, coalesce, concat_records
+from repro.stream.metrics import StreamMetrics
+from repro.stream.scheduler import RefreshScheduler
+from repro.stream.source import DeltaRecord, DeltaSource
+
+
+class StreamSession:
+    """Continuously refresh one declared job from a delta stream."""
+
+    def __init__(self, spec: Spec, data: KV,
+                 source: Optional[DeltaSource] = None,
+                 config: Optional[RunConfig] = None,
+                 stream: Optional[StreamConfig] = None,
+                 name: str = "session"):
+        self.name = name
+        self.session = Session(spec, config)
+        self.sconfig = stream or StreamConfig()
+        self.source = source
+        self.scheduler = RefreshScheduler(self.sconfig)
+        self.metrics = StreamMetrics()
+
+        # input mirror (the partitioned input file on HDFS): rerun() and
+        # the cold-run oracle both read it
+        self._mkeys = np.array(data.keys)
+        self._mvalues = {n: np.array(a) for n, a in data.values.items()}
+        self._mvalid = np.array(data.valid)
+
+        self._inbox: queue_mod.Queue = queue_mod.Queue(
+            maxsize=self.sconfig.queue_capacity)
+        self._pending: List[Tuple[DeltaRecord, float]] = []
+        self._pending_rows = 0
+        self._lock = threading.RLock()       # engine + mirror + scheduler
+        self._stop_evt = threading.Event()
+        self._flush = False
+        self._busy = False
+        self._starved = False                # last ingest found nothing
+        self._thread: Optional[threading.Thread] = None
+        self._managed = False                # scheduled by a server
+        self._error: Optional[BaseException] = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, background: bool = True) -> "StreamSession":
+        """Run the initial job, then (optionally) start the worker thread.
+
+        ``background=False`` leaves batch processing to explicit
+        :meth:`step` calls — the mode :class:`MultiSessionServer` uses to
+        time-slice many tenants over one thread.
+        """
+        with self._lock:
+            if self.session.epoch < 0:
+                rep = self.session.run(self._mirror_kv())
+                self.scheduler.seed(rep.seconds)
+        if background and self._thread is None:
+            self._stop_evt.clear()           # allow stop() -> start() cycles
+            self._thread = threading.Thread(
+                target=self._loop, name=f"stream-{self.name}", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the worker; rows not yet processed stay buffered."""
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    def __enter__(self) -> "StreamSession":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- ingestion ---------------------------------------------------------
+    def submit(self, record_ids, values, sign, *, epoch: int = 0,
+               timeout: Optional[float] = None) -> None:
+        """Push one group of signed delta rows.  Blocks while the ingest
+        queue is full (backpressure); raises ``queue.Full`` on timeout."""
+        rec = DeltaRecord(record_ids=record_ids, values=values, sign=sign,
+                          timestamp=time.time(), epoch=epoch)
+        self.submit_record(rec, timeout=timeout)
+
+    def submit_record(self, record: DeltaRecord,
+                      timeout: Optional[float] = None) -> None:
+        self._inbox.put((record, time.perf_counter()), block=True,
+                        timeout=timeout)
+
+    def _ingest(self) -> bool:
+        """Move rows from the inbox and the source into the pending batch
+        (never beyond one batch's budget: the inbox stays bounded and the
+        producers blocked — that is the backpressure path)."""
+        # not idle while probing: a concurrent drain() must not observe the
+        # window where a record left the inbox but isn't pending yet
+        self._starved = False
+        progressed = False
+        budget = self.sconfig.max_batch_records - self._pending_rows
+        while budget > 0:
+            try:
+                rec, arrival = self._inbox.get_nowait()
+            except queue_mod.Empty:
+                break
+            self._pending.append((rec, arrival))
+            self._pending_rows += rec.n_rows
+            budget -= rec.n_rows
+            progressed = True
+        if self.source is not None and budget > 0 and \
+                not self.source.exhausted:
+            now = time.perf_counter()
+            for rec in self.source.poll(budget):
+                self._pending.append((rec, now))
+                self._pending_rows += rec.n_rows
+                progressed = True
+        self._starved = not progressed and not self._pending
+        return progressed
+
+    def _should_fire(self) -> bool:
+        if not self._pending:
+            return False
+        if self._flush or self._pending_rows >= self.sconfig.max_batch_records:
+            return True
+        oldest = self._pending[0][1]
+        return (time.perf_counter() - oldest) >= self.sconfig.max_batch_delay
+
+    # -- the refresh step --------------------------------------------------
+    def step(self) -> bool:
+        """One synchronous scheduling quantum: ingest, then process at most
+        one micro-batch.  Returns True if a refresh ran."""
+        self._ingest()
+        if not self._should_fire():
+            return False
+        self._process_batch()
+        return True
+
+    def _loop(self) -> None:
+        while not self._stop_evt.is_set():
+            try:
+                if not self.step():
+                    time.sleep(self.sconfig.poll_interval)
+            except BaseException as e:       # noqa: BLE001 — surfaced via
+                self._error = e              # _check_error on drain/result
+                return
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                f"stream worker for {self.name!r} died; the failing "
+                f"micro-batch was dropped") from self._error
+
+    def _process_batch(self) -> None:
+        self._busy = True
+        try:
+            batch = self._pending
+            self._pending = []
+            self._pending_rows = 0
+            records = [r for r, _ in batch]
+            first_arrival = min(a for _, a in batch)
+            epoch = max(r.epoch for r in records)
+            n_in = sum(r.n_rows for r in records)
+
+            backend = self.session.config.backend
+            if self.sconfig.coalesce:
+                res = coalesce(records, backend=backend)
+            else:
+                rids, vals, signs = concat_records(records)
+                res = CoalesceResult(make_delta(rids, vals, signs),
+                                     n_in, n_in, 0, 0, 0)
+            if res.delta is not None:
+                rid = np.asarray(res.delta.record_ids)
+                if rid.size and int(rid.max()) >= self._mkeys.shape[0]:
+                    raise ValueError(
+                        f"record id {int(rid.max())} outside the input "
+                        f"mirror capacity {self._mkeys.shape[0]}; grow the "
+                        f"initial data's padding to stream inserts")
+
+            with self._lock:
+                if res.delta is None:          # everything cancelled out
+                    action, refresh_s = "noop", 0.0
+                else:
+                    apply_delta_host(self._mkeys, self._mvalues,
+                                     self._mvalid, res.delta)
+                    st = self.session.store
+                    decision = self.scheduler.decide(
+                        res.n_out, state_rows=int(self._mvalid.sum()),
+                        store_file_bytes=st.file_bytes() if st else 0,
+                        store_live_bytes=st.live_bytes() if st else 0)
+                    if decision.action == "update":
+                        rep = self.session.update(res.delta)
+                    else:
+                        rep = self.session.rerun(self._mirror_kv())
+                    self.scheduler.observe(decision.action, res.n_out,
+                                           rep.seconds)
+                    action, refresh_s = decision.action, rep.seconds
+            self.metrics.observe_batch(
+                n_in=n_in, n_engine=res.n_out, action=action,
+                latency_s=time.perf_counter() - first_arrival,
+                refresh_s=refresh_s, epoch=epoch)
+        finally:
+            self._busy = False
+
+    # -- synchronization ---------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """No buffered input, no batch in flight, nothing the source can
+        offer right now."""
+        return (self._inbox.empty() and not self._pending
+                and not self._busy and self._starved)
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every available delta row is reflected in
+        ``result`` (flushes partial micro-batches immediately)."""
+        deadline = time.perf_counter() + timeout
+        self._flush = True
+        try:
+            while True:
+                self._check_error()
+                if self._thread is None and not self._managed:
+                    self.step()              # sync mode: we are the consumer
+                if self.idle:
+                    return
+                if time.perf_counter() > deadline:
+                    raise TimeoutError(
+                        f"drain() exceeded {timeout}s "
+                        f"(inbox={self._inbox.qsize()}, "
+                        f"pending={self._pending_rows} rows)")
+                if self._thread is not None or self._managed:
+                    time.sleep(min(self.sconfig.poll_interval, 0.005))
+        finally:
+            self._flush = False
+
+    # -- outputs -----------------------------------------------------------
+    @property
+    def result(self) -> Dict[str, np.ndarray]:
+        self._check_error()
+        with self._lock:
+            return self.session.result
+
+    def report(self, **kw):
+        with self._lock:
+            return self.session.report(**kw)
+
+    def _mirror_kv(self) -> KV:
+        return KV(jnp.asarray(self._mkeys),
+                  {n: jnp.asarray(a) for n, a in self._mvalues.items()},
+                  jnp.asarray(self._mvalid))
+
+    def mirror_kv(self) -> KV:
+        """The fully-updated input as of the last processed batch — what a
+        cold ``run()`` would consume to reproduce ``result``."""
+        with self._lock:
+            return self._mirror_kv()
+
+    def snapshot(self, path: Optional[str] = None) -> Path:
+        """Checkpoint the session plus the stream watermark; a replayable
+        source can ``rewind(watermark)`` after restore and re-drain."""
+        with self._lock:
+            out = self.session.checkpoint(path)
+            root = Path(path or self.session.config.checkpoint_dir)
+            (root / "stream.json").write_text(json.dumps(
+                {"watermark": self.metrics.last_epoch,
+                 "epoch": self.session.epoch, "name": self.name}))
+        return out
+
+    def compact_store(self) -> int:
+        """Reclaim obsolete MRBG bytes (the server's budget lever)."""
+        with self._lock:
+            reclaimed = self.session.compact_store()
+        if reclaimed:
+            self.metrics.observe_compaction(reclaimed)
+        return reclaimed
+
+    def store_bytes(self) -> int:
+        with self._lock:
+            return self.session.store_bytes()

@@ -1,9 +1,8 @@
 """repro.api façade: one Session drives every paper mode, with parity
-against the pre-refactor entry points on identical inputs."""
+against the internal (pre-refactor) entry points on identical inputs."""
 import os
 import subprocess
 import sys
-import warnings
 
 import numpy as np
 import jax.numpy as jnp
@@ -57,11 +56,9 @@ class TestOneStep:
         rep0 = sess.run(data)
         rep1 = sess.update(delta)
 
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            old = IncrementalJob(wc.make_spec(self.VOCAB), value_bytes=4)
-            old.initial_run(wc.make_input(np.arange(len(docs)), docs))
-            old.incremental_run(delta)
+        old = IncrementalJob(wc.make_spec(self.VOCAB), value_bytes=4)
+        old.initial_run(wc.make_input(np.arange(len(docs)), docs))
+        old.incremental_run(delta)
 
         np.testing.assert_array_equal(sess.result["c"],
                                       old.view.as_dict()["c"])
@@ -83,11 +80,9 @@ class TestOneStep:
         rep = auto.update(delta)
         assert rep.mode == "accumulator"
 
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            old = AccumulatorJob(wc.make_spec(self.VOCAB))
-            old.initial_run(wc.make_input(np.arange(len(docs)), docs))
-            old.incremental_run(delta)
+        old = AccumulatorJob(wc.make_spec(self.VOCAB))
+        old.initial_run(wc.make_input(np.arange(len(docs)), docs))
+        old.incremental_run(delta)
         np.testing.assert_array_equal(auto.result["c"],
                                       old.view.as_dict()["c"])
 
@@ -108,11 +103,8 @@ class TestIterative:
         sess = Session(spec, RunConfig(max_iters=80, tol=1e-7))
         rep = sess.run(struct)
 
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            state, hist = run_iterative(pr.make_spec(128),
-                                        pr.make_struct(nbrs),
-                                        max_iters=80, tol=1e-7)
+        state, hist = run_iterative(pr.make_spec(128), pr.make_struct(nbrs),
+                                    max_iters=80, tol=1e-7)
         assert rep.mode == "iterative"
         assert rep.iters == hist["iters"]
         np.testing.assert_allclose(sess.result["r"],
@@ -155,12 +147,10 @@ class TestIncrementalIterative:
         sess.run(struct)
         rep = sess.update(delta)
 
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            old = IncrIterJob(pr.make_spec(S), pr.make_struct(nbrs),
-                              value_bytes=4)
-            old.initial_converge(max_iters=150, tol=1e-7)
-            st, hist = old.refresh(delta, max_iters=150, tol=1e-7)
+        old = IncrIterJob(pr.make_spec(S), pr.make_struct(nbrs),
+                          value_bytes=4)
+        old.initial_converge(max_iters=150, tol=1e-7)
+        st, hist = old.refresh(delta, max_iters=150, tol=1e-7)
 
         assert rep.mode == hist["mode"]
         assert rep.iters == hist["iters"]
@@ -200,8 +190,6 @@ class TestIncrementalIterative:
 
 def test_distributed_via_config_parity():
     script = """
-import warnings
-warnings.simplefilter("error", DeprecationWarning)  # facade must not warn
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.api import Session, RunConfig, make_delta
@@ -216,18 +204,16 @@ sess = Session(spec, RunConfig(mesh=mesh, shuffle_cap=512,
 rep = sess.run(struct)
 assert rep.mode == "distributed", rep.mode
 
-with warnings.catch_warnings():
-    warnings.simplefilter("ignore", DeprecationWarning)
-    from repro.core.distributed import (partition_struct, partition_state,
-                                        unpartition_state, run_distributed)
-    skeys, svals, svalid = partition_struct(
-        spec, np.arange(S, dtype=np.int32), {"nbrs": nbrs},
-        np.ones(S, bool), 8, sess._driver._partition_cap())
-    state0 = partition_state({"r": np.ones(S, np.float32)}, S, 8)
-    out, hist = run_distributed(spec, mesh, (skeys, svals, svalid), state0,
-                                axis="data", shuffle_cap=512, max_iters=60,
-                                tol=1e-7)
-    ref = unpartition_state({k: np.asarray(v) for k, v in out.items()}, S)
+from repro.core.distributed import (partition_struct, partition_state,
+                                    unpartition_state, run_distributed)
+skeys, svals, svalid = partition_struct(
+    spec, np.arange(S, dtype=np.int32), {"nbrs": nbrs},
+    np.ones(S, bool), 8, sess._driver._partition_cap())
+state0 = partition_state({"r": np.ones(S, np.float32)}, S, 8)
+out, hist = run_distributed(spec, mesh, (skeys, svals, svalid), state0,
+                            axis="data", shuffle_cap=512, max_iters=60,
+                            tol=1e-7)
+ref = unpartition_state({k: np.asarray(v) for k, v in out.items()}, S)
 
 np.testing.assert_array_equal(sess.result["r"], ref["r"])
 assert rep.iters == hist["iters"]
@@ -283,11 +269,12 @@ def test_make_delta_keys_default_to_record_ids():
     assert bool(np.all(np.asarray(d.valid)))
 
 
-def test_make_delta_legacy_order_shim_warns():
-    with warnings.catch_warnings(record=True) as wlist:
-        warnings.simplefilter("always")
-        d = make_delta([9, 9], [1, 2], {"w": jnp.zeros((2, 3))}, [-1, 1])
-    assert any(issubclass(w.category, DeprecationWarning) for w in wlist)
+def test_make_delta_legacy_order_rejected():
+    # the pre-repro.api positional order (keys, record_ids, values, sign)
+    # was shimmed for one release; keys/valid are now keyword-only
+    with pytest.raises(TypeError):
+        make_delta([9, 9], [1, 2], {"w": jnp.zeros((2, 3))}, [-1, 1])
+    d = make_delta([1, 2], {"w": jnp.zeros((2, 3))}, [-1, 1], keys=[9, 9])
     np.testing.assert_array_equal(np.asarray(d.keys), [9, 9])
     np.testing.assert_array_equal(np.asarray(d.record_ids), [1, 2])
     np.testing.assert_array_equal(np.asarray(d.sign), [-1, 1])
@@ -320,13 +307,15 @@ def test_session_lifecycle_errors():
         sess.run(data)
 
 
-def test_old_entry_points_warn_deprecation():
+def test_old_entry_points_do_not_warn():
+    """The one-release deprecation window is over: the internal entry
+    points are plain functions again (no shim, no DeprecationWarning)."""
+    import warnings
     docs = _wc_corpus(n=8)
-    with warnings.catch_warnings(record=True) as wlist:
-        warnings.simplefilter("always")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
         from repro.core.engine import run_onestep
         run_onestep(wc.make_spec(60), wc.make_input(np.arange(8), docs))
-    assert any(issubclass(w.category, DeprecationWarning) for w in wlist)
 
 
 def test_every_app_has_make_job():

@@ -1,0 +1,149 @@
+"""Coalescer correctness: coalesce(deltas) + one update() must be
+equivalent to applying the same deltas one row at a time, on both
+shuffle/reduce backends (the hot path rides repro.kernels.ops)."""
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+from repro.api import RunConfig, Session
+from repro.apps import wordcount as wc
+from repro.core.incremental import make_delta
+from repro.stream import DeltaRecord, coalesce, coalesce_rows
+
+BACKENDS = ("xla", "pallas")
+VOCAB = 16
+WORDS = 3
+
+
+# ---------------------------------------------------------------------------
+# unit semantics
+# ---------------------------------------------------------------------------
+
+def test_first_last_rules():
+    rid = np.array([3, 3, 5, 7, 7, 7, 7, 9, 9], np.int32)
+    sg = np.array([-1, 1, 1, -1, 1, -1, 1, 1, -1], np.int8)
+    vals = {"w": np.arange(9 * 2, dtype=np.int32).reshape(9, 2)}
+    res = coalesce_rows(rid, vals, sg)
+    # 3: update (-,+) kept; 5: net insert; 7: (-,+,-,+) -> (-,+);
+    # 9: (+,-) created-and-destroyed -> cancelled entirely
+    assert (res.n_in, res.n_out, res.n_records) == (9, 5, 4)
+    assert res.n_cancelled == 4
+    assert (res.n_inserts, res.n_deletes) == (1, 0)
+    np.testing.assert_array_equal(np.asarray(res.delta.record_ids),
+                                  [3, 3, 5, 7, 7])
+    np.testing.assert_array_equal(np.asarray(res.delta.sign),
+                                  [-1, 1, 1, -1, 1])
+    # kept rows carry the right payloads: first '-' row, last '+' row
+    np.testing.assert_array_equal(np.asarray(res.delta.values["w"]),
+                                  vals["w"][[0, 1, 2, 3, 6]])
+
+
+def test_everything_cancels():
+    res = coalesce_rows(np.array([4, 4], np.int32),
+                        {"w": np.zeros((2, 2), np.int32)},
+                        np.array([1, -1], np.int8))
+    assert res.delta is None
+    assert res.n_out == 0 and res.n_cancelled == 2
+    assert res.n_records == 1
+
+
+def test_empty_batch():
+    res = coalesce([])
+    assert res.delta is None and res.n_in == 0
+
+
+def test_coalesce_concatenates_records():
+    a = DeltaRecord(record_ids=[1, 1], sign=[-1, 1],
+                    values={"w": np.zeros((2, 2), np.int32)}, epoch=0)
+    b = DeltaRecord(record_ids=[1, 1], sign=[-1, 1],
+                    values={"w": np.ones((2, 2), np.int32)}, epoch=1)
+    res = coalesce([a, b])
+    # two sequential updates of record 1 collapse to (- first old, + last new)
+    assert res.n_out == 2
+    np.testing.assert_array_equal(np.asarray(res.delta.values["w"]),
+                                  [[0, 0], [1, 1]])
+    np.testing.assert_array_equal(np.asarray(res.delta.sign), [-1, 1])
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property, per backend
+# ---------------------------------------------------------------------------
+
+def _well_formed_rows(rng, rids, docs0):
+    """Turn a raw rid sequence into a valid signed op-row sequence over an
+    exists-mirror, returning (rows, final corpus, final validity)."""
+    mirror = docs0.copy()
+    exists = np.ones(len(docs0), bool)
+    rows = []                            # (rid, value row, sign)
+    for r in rids:
+        if exists[r]:
+            if rng.integers(0, 3) == 0:              # delete
+                rows.append((r, mirror[r].copy(), -1))
+                exists[r] = False
+            else:                                    # update: '-' old, '+' new
+                new = rng.integers(0, VOCAB, (WORDS,)).astype(np.int32)
+                rows.append((r, mirror[r].copy(), -1))
+                rows.append((r, new, +1))
+                mirror[r] = new
+        else:                                        # re-insert
+            new = rng.integers(0, VOCAB, (WORDS,)).astype(np.int32)
+            rows.append((r, new, +1))
+            mirror[r] = new
+            exists[r] = True
+    return rows, mirror, exists
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=8),
+       st.integers(0, 10**6))
+def test_coalesced_update_equivalent_to_one_by_one(backend, rids, seed):
+    rng = np.random.default_rng(seed)
+    docs0 = rng.integers(0, VOCAB, (6, WORDS)).astype(np.int32)
+    rows, mirror, exists = _well_formed_rows(rng, rids, docs0)
+
+    spec, data = wc.make_job(docs0, VOCAB)
+    cfg = RunConfig(backend=backend, onestep_path="mrbg", value_bytes=4)
+    one_by_one = Session(spec, cfg)
+    one_by_one.run(data)
+    for r, v, s in rows:
+        one_by_one.update(make_delta([r], {"w": v[None]}, [s]))
+
+    batched = Session(spec, cfg)
+    batched.run(data)
+    if rows:
+        res = coalesce_rows(
+            np.array([r for r, _, _ in rows], np.int32),
+            {"w": np.stack([v for _, v, _ in rows])},
+            np.array([s for _, _, s in rows], np.int8), backend=backend)
+        assert res.n_out <= res.n_in
+        if res.delta is not None:
+            batched.update(res.delta)
+
+    np.testing.assert_array_equal(batched.result["c"],
+                                  one_by_one.result["c"])
+    np.testing.assert_array_equal(batched.result["c"],
+                                  wc.oracle(mirror, VOCAB, valid=exists))
+
+
+def test_coalesced_update_equivalent_accumulator_path():
+    """Same property through the §3.5 accumulator fast path."""
+    rng = np.random.default_rng(3)
+    docs0 = rng.integers(0, VOCAB, (6, WORDS)).astype(np.int32)
+    rows, mirror, exists = _well_formed_rows(rng, [0, 1, 1, 4, 4, 2], docs0)
+
+    spec, data = wc.make_job(docs0, VOCAB)
+    cfg = RunConfig(onestep_path="accumulator")
+    one_by_one = Session(spec, cfg)
+    one_by_one.run(data)
+    for r, v, s in rows:
+        one_by_one.update(make_delta([r], {"w": v[None]}, [s]))
+
+    batched = Session(spec, cfg)
+    batched.run(data)
+    res = coalesce_rows(np.array([r for r, _, _ in rows], np.int32),
+                        {"w": np.stack([v for _, v, _ in rows])},
+                        np.array([s for _, _, s in rows], np.int8))
+    batched.update(res.delta)
+    np.testing.assert_array_equal(batched.result["c"],
+                                  one_by_one.result["c"])

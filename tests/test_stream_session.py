@@ -1,0 +1,324 @@
+"""repro.stream end-to-end: async StreamSession refreshes match cold runs
+bit-for-bit, the scheduler switches refresh modes at the configured
+crossover, and MultiSessionServer keeps tenants isolated."""
+import os
+import queue
+
+import numpy as np
+import pytest
+
+from repro.api import RunConfig, Session, StreamConfig
+from repro.apps import pagerank as pr, wordcount as wc
+from repro.stream import (
+    DeltaRecord, FileTailSource, MultiSessionServer, RefreshScheduler,
+    StreamSession,
+)
+
+BACKENDS = ("xla", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: async micro-batched refreshes == cold run on the final input
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_wordcount_stream_bit_identical(backend):
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, 48, (32, 5)).astype(np.int32)
+    spec, data, source = wc.make_stream(docs, 48, frac=0.1, seed=4,
+                                        epochs=6)
+    # small batches so the six source epochs arrive as several micro-batches
+    ss = StreamSession(spec, data, source=source,
+                       config=RunConfig(backend=backend, value_bytes=4),
+                       stream=StreamConfig(max_batch_records=8,
+                                           max_batch_delay=0.005,
+                                           crossover=0.5))
+    with ss:
+        ss.drain(timeout=120)
+    assert ss.metrics.batches >= 2
+    assert ss.metrics.last_epoch == 5
+
+    cold = Session(spec, RunConfig(backend=backend, value_bytes=4))
+    cold.run(wc.make_input(np.arange(len(docs)), source.values["w"]))
+    np.testing.assert_array_equal(ss.result["c"], cold.result["c"])
+    # the maintained input mirror agrees with the source's dataset mirror
+    np.testing.assert_array_equal(
+        np.asarray(ss.mirror_kv().values["w"]), source.values["w"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pagerank_stream_incremental(backend):
+    n = 96 if backend == "pallas" else 192
+    nbrs = pr.random_graph(n, 4, seed=2, p_edge=0.5)
+    spec, struct, source = pr.make_stream(nbrs, frac=0.02, seed=9, epochs=3)
+    cfg = RunConfig(backend=backend, max_iters=150, tol=1e-7, value_bytes=4)
+    ss = StreamSession(spec, struct, source=source, config=cfg,
+                       stream=StreamConfig(max_batch_records=4,
+                                           max_batch_delay=0.005,
+                                           crossover=0.5))
+    with ss:
+        ss.drain(timeout=300)
+    assert ss.metrics.refreshes.get("update", 0) >= 1
+
+    cold = Session(spec, cfg)
+    cold.run(pr.make_struct(source.values["nbrs"]))
+    got, want = ss.result["r"], cold.result["r"]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+def test_pagerank_forced_rerun_bit_identical():
+    """crossover=0 makes every micro-batch a full rerun; a rerun on the
+    maintained mirror is the same program as a cold run -> bit-identical."""
+    nbrs = pr.random_graph(128, 4, seed=5, p_edge=0.5)
+    spec, struct, source = pr.make_stream(nbrs, frac=0.05, seed=1, epochs=2)
+    cfg = RunConfig(max_iters=120, tol=1e-7)
+    ss = StreamSession(spec, struct, source=source, config=cfg,
+                       stream=StreamConfig(policy="paper", crossover=0.0))
+    with ss:
+        ss.drain(timeout=300)
+    assert ss.metrics.refreshes == {"rerun": ss.metrics.batches}
+
+    cold = Session(spec, cfg)
+    cold.run(pr.make_struct(source.values["nbrs"]))
+    np.testing.assert_array_equal(ss.result["r"], cold.result["r"])
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_switches_at_crossover():
+    """Below the configured delta ratio: incremental update; above: full
+    rerun — the Fig. 8 crossover as an online policy."""
+    rng = np.random.default_rng(1)
+    docs = rng.integers(0, 40, (40, 4)).astype(np.int32)
+    spec, data = wc.make_job(docs, 40)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(policy="paper", crossover=0.3,
+                                           max_batch_delay=0.0))
+    ss.start(background=False)
+    mirror = docs.copy()
+
+    def push_epoch(rows):
+        new = rng.integers(0, 40, (len(rows), 4)).astype(np.int32)
+        rid = np.repeat(np.asarray(rows, np.int32), 2)
+        buf = np.empty((2 * len(rows), 4), np.int32)
+        buf[0::2] = mirror[rows]
+        buf[1::2] = new
+        mirror[rows] = new
+        ss.submit(rid, {"w": buf}, np.tile(np.int8([-1, 1]), len(rows)))
+        ss.drain(timeout=60)
+
+    push_epoch([3, 9])                      # 4 rows / 40 live = 0.1 < 0.3
+    push_epoch(list(range(20)))             # 40 rows / 40 live = 1.0 > 0.3
+    actions = [d.action for d in ss.scheduler.decisions]
+    assert actions == ["update", "rerun"]
+    assert ss.scheduler.decisions[0].delta_ratio < 0.3
+    assert ss.scheduler.decisions[1].delta_ratio > 0.3
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 40))
+
+
+def test_scheduler_policies_unit():
+    sch = RefreshScheduler(StreamConfig(policy="latency", crossover=0.25))
+    # cold model falls back to the crossover prior
+    assert sch.decide(1, 100).action == "update"
+    assert sch.decide(50, 100).action == "rerun"
+    # once both paths are measured, the cheaper predicted path wins
+    sch.observe("update", 10, 0.010)        # 1 ms per delta row
+    sch.observe("rerun", 50, 0.005)         # full recompute: 5 ms
+    assert sch.decide(2, 1000).action == "update"    # 2ms < 5ms
+    assert sch.decide(50, 1000).action == "rerun"    # 50ms > 5ms
+
+    tp = RefreshScheduler(StreamConfig(policy="throughput", crossover=0.9,
+                                       store_bloat=2.0))
+    d = tp.decide(1, 1000, store_file_bytes=3000, store_live_bytes=1000)
+    assert d.action == "rerun" and "bloat" in d.reason
+    assert tp.decide(1, 1000, store_file_bytes=1500,
+                     store_live_bytes=1000).action == "update"
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving
+# ---------------------------------------------------------------------------
+
+def test_multi_session_server_isolation_and_budget():
+    rng = np.random.default_rng(7)
+    corpora = {name: rng.integers(0, 32, (24, 4)).astype(np.int32)
+               for name in ("alice", "bob")}
+    server = MultiSessionServer(store_budget_bytes=64 * 1024)
+    cfg = StreamConfig(max_batch_delay=0.0, crossover=2.0)  # always update
+    for name, docs in corpora.items():
+        spec, data = wc.make_job(docs, 32)
+        server.add(StreamSession(spec, data, name=name,
+                                 config=RunConfig(onestep_path="mrbg",
+                                                  value_bytes=4),
+                                 stream=cfg))
+    mirrors = {n: d.copy() for n, d in corpora.items()}
+    with server:
+        for i in range(6):                  # interleaved tenant updates
+            name = ("alice", "bob")[i % 2]
+            row = int(rng.integers(0, 24))
+            new = rng.integers(0, 32, (4,)).astype(np.int32)
+            server[name].submit(
+                [row, row], {"w": np.stack([mirrors[name][row], new])},
+                [-1, 1], epoch=i)
+            mirrors[name][row] = new
+        server.drain(timeout=120)
+
+    for name in corpora:                    # no cross-tenant state bleed
+        np.testing.assert_array_equal(server[name].result["c"],
+                                      wc.oracle(mirrors[name], 32))
+    stats = server.stats()
+    assert set(stats["tenants"]) == {"alice", "bob"}
+    assert not stats["over_budget"]
+    assert stats["total_store_bytes"] <= 64 * 1024
+
+
+def test_server_budget_forces_compaction():
+    rng = np.random.default_rng(11)
+    docs = rng.integers(0, 32, (24, 4)).astype(np.int32)
+    spec, data = wc.make_job(docs, 32)
+    ss = StreamSession(spec, data, name="fat",
+                       config=RunConfig(onestep_path="mrbg", value_bytes=4),
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    server = MultiSessionServer(store_budget_bytes=1)   # impossible budget
+    server.add(ss)
+    mirror = docs.copy()
+    for i in range(4):
+        row = int(rng.integers(0, 24))
+        new = rng.integers(0, 32, (4,)).astype(np.int32)
+        ss.submit([row, row], {"w": np.stack([mirror[row], new])}, [-1, 1])
+        mirror[row] = new
+        server.sweep()
+    server.drain(timeout=60)
+    assert ss.metrics.compactions >= 1      # budget pressure compacted
+    assert server.stats()["over_budget"]    # ...but 1 byte is unreachable
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 32))
+
+
+# ---------------------------------------------------------------------------
+# ingestion mechanics
+# ---------------------------------------------------------------------------
+
+def test_submit_backpressure():
+    docs = np.zeros((4, 3), np.int32)
+    spec, data = wc.make_job(docs, 8)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(queue_capacity=2))
+    ss.submit([0], {"w": np.zeros((1, 3), np.int32)}, [1])
+    ss.submit([1], {"w": np.zeros((1, 3), np.int32)}, [1])
+    with pytest.raises(queue.Full):         # nobody drains: bounded queue
+        ss.submit([2], {"w": np.zeros((1, 3), np.int32)}, [1],
+                  timeout=0.05)
+
+
+def test_worker_error_surfaces_on_drain():
+    """An engine error must not silently kill the worker thread: drain()
+    (and result) re-raise it with the original cause attached."""
+    docs = np.zeros((4, 3), np.int32)
+    spec, data = wc.make_job(docs, 8)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0))
+    with ss:
+        ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])  # bad rid
+        with pytest.raises(RuntimeError, match="worker.*died"):
+            ss.drain(timeout=30)
+        with pytest.raises(RuntimeError, match="worker.*died"):
+            ss.result
+
+
+def test_stop_start_cycle_keeps_processing():
+    rng = np.random.default_rng(4)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0))
+    ss.start()
+    ss.stop()
+    ss.start()                              # must spawn a live worker again
+    mirror = docs.copy()
+    new = rng.integers(0, 16, (3,)).astype(np.int32)
+    ss.submit([2, 2], {"w": np.stack([mirror[2], new])}, [-1, 1])
+    mirror[2] = new
+    ss.drain(timeout=60)
+    ss.stop()
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_tenant_drain_under_running_server():
+    """drain() on a server-managed tenant must wait for the server's
+    sweep thread instead of becoming a second, racing consumer."""
+    rng = np.random.default_rng(6)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    ss = StreamSession(spec, data, name="t",
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    with MultiSessionServer() as server:
+        server.add(ss)
+        mirror = docs.copy()
+        new = rng.integers(0, 16, (3,)).astype(np.int32)
+        ss.submit([1, 1], {"w": np.stack([mirror[1], new])}, [-1, 1])
+        mirror[1] = new
+        ss.drain(timeout=60)                # served by the server thread
+        np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_record_id_outside_mirror_rejected():
+    docs = np.zeros((4, 3), np.int32)
+    spec, data = wc.make_job(docs, 8)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0))
+    ss.start(background=False)
+    ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])
+    with pytest.raises(ValueError, match="mirror capacity"):
+        ss.step()
+
+
+def test_file_tail_source_roundtrip_and_rewind(tmp_path):
+    path = os.path.join(tmp_path, "deltas.jsonl")
+    recs = [DeltaRecord(record_ids=[i, i],
+                        values={"nbrs": np.full((2, 3), i, np.int32)},
+                        sign=[-1, 1], timestamp=float(i), epoch=i)
+            for i in range(3)]
+    FileTailSource.write(path, recs, append=False)
+
+    src = FileTailSource(path, dtypes={"nbrs": "int32"})
+    got = src.poll(max_rows=100)
+    assert [r.epoch for r in got] == [0, 1, 2]
+    assert src.exhausted and src.watermark == 2
+    np.testing.assert_array_equal(got[1].values["nbrs"],
+                                  np.full((2, 3), 1, np.int32))
+    assert got[1].values["nbrs"].dtype == np.int32
+
+    # tail: appended records appear on the next poll
+    FileTailSource.write(path, [DeltaRecord(
+        record_ids=[9, 9], values={"nbrs": np.full((2, 3), 9, np.int32)},
+        sign=[-1, 1], epoch=3)])
+    more = src.poll(max_rows=100)
+    assert [r.epoch for r in more] == [3]
+
+    # recovery: rewind past a snapshot watermark replays only the suffix
+    src.rewind(epoch=1)
+    replay = src.poll(max_rows=100)
+    assert [r.epoch for r in replay] == [2, 3]
+
+
+def test_snapshot_carries_stream_watermark(tmp_path):
+    rng = np.random.default_rng(2)
+    docs = rng.integers(0, 24, (12, 4)).astype(np.int32)
+    spec, data, source = wc.make_stream(docs, 24, frac=0.2, seed=0,
+                                        epochs=3)
+    ss = StreamSession(spec, data, source=source,
+                       stream=StreamConfig(max_batch_records=4,
+                                           max_batch_delay=0.0))
+    ss.start(background=False)
+    ss.drain(timeout=60)
+    ss.snapshot(str(tmp_path))
+
+    import json
+    meta = json.loads((tmp_path / "stream.json").read_text())
+    assert meta["watermark"] == 2 and meta["name"] == "session"
+    restored = Session.restore(spec, str(tmp_path))
+    np.testing.assert_array_equal(restored.result["c"], ss.result["c"])
