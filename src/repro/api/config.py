@@ -73,6 +73,14 @@ class RunConfig:
     #    for the streaming layer's online refresh-cost models)
     report_history: int = 64
 
+    # -- latency tail control: deltas entering Session.update() are padded
+    #    up to the next power-of-two bucket (>= delta_bucket_min rows) so
+    #    the refresh path traces once per bucket, not once per row count;
+    #    compilation_cache_dir points JAX's persistent executable cache at
+    #    a directory so compiles survive process restarts
+    delta_bucket_min: int = 64
+    compilation_cache_dir: Optional[str] = None
+
     def __post_init__(self):
         if self.onestep_path not in ONESTEP_PATHS:
             raise ValueError(
@@ -85,6 +93,8 @@ class RunConfig:
         if self.report_history < 1:
             raise ValueError("report_history must be >= 1 (the trim in "
                              "Session._finish keeps the newest reports)")
+        if self.delta_bucket_min < 1:
+            raise ValueError("delta_bucket_min must be >= 1")
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
@@ -138,6 +148,15 @@ class StreamConfig:
     crossover: float = 0.25            # |Δ|/|D| where full recompute wins
     cost_ema: float = 0.5              # EWMA factor of online cost estimates
     store_bloat: float = 4.0           # throughput: rerun when file/live > x
+
+    # -- pre-warm: compile the delta bucket ladder (delta_bucket_min up to
+    #    prewarm_rows, default max_batch_records) on start()/admission via
+    #    no-op deltas, so the first real micro-batch hits warm executables.
+    #    Off by default: each bucket costs one compile of the full refresh
+    #    path, which a throughput-oriented tenant may not want to pay
+    #    up-front.
+    prewarm: bool = False
+    prewarm_rows: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in STREAM_POLICIES:

@@ -37,10 +37,12 @@ from repro.api.report import RunReport
 from repro.core.engine import JobSpec, run_onestep
 from repro.core.incremental import (
     DeltaKV, ResultView, _v2_dict, apply_delta_host, incremental_onestep,
+    pad_delta,
 )
 from repro.core.iterative import IterSpec, State, run_iterative, run_plain
 from repro.core.kvstore import KV, edges_to_host, next_bucket
 from repro.core.mrbg_store import IOStats, MRBGStore
+from repro.kernels import jitcache
 
 Spec = Union[JobSpec, IterSpec]
 
@@ -51,6 +53,8 @@ class Session:
     def __init__(self, spec: Spec, config: Optional[RunConfig] = None):
         self.spec = spec
         self.config = config or RunConfig()
+        if self.config.compilation_cache_dir is not None:
+            jitcache.enable_persistent_cache(self.config.compilation_cache_dir)
         self.epoch = -1                     # becomes 0 on run()
         self._last: Optional[RunReport] = None
         # bounded RunReport history (oldest first) — the raw material for
@@ -96,6 +100,11 @@ class Session:
             raise RuntimeError("update() before run(); execute the initial "
                                "job first")
         t0 = time.perf_counter()
+        # bucket the delta's row capacity so the jitted refresh path traces
+        # once per power-of-two bucket, not once per distinct row count
+        cap = next_bucket(delta.capacity, self.config.delta_bucket_min)
+        if cap != delta.capacity:
+            delta = pad_delta(delta, cap)
         self._driver.update(delta)
         self.epoch += 1
         return self._finish(t0)

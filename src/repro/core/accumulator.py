@@ -29,7 +29,7 @@ from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce,
     next_bucket, segment_reduce, sort_edges,
 )
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -37,15 +37,22 @@ def _delta_map_acc(spec_static, delta: DeltaKV) -> Edges:
     # NOTE: no shuffle-sort here — the accumulator path needs neither chunk
     # grouping nor merge order (that is exactly its §3.5 saving); host-side
     # nonzero extraction replaces it.
+    jitcache.count_trace("accumulator._delta_map_acc")
     map_fn, = spec_static
     kv = KV(delta.keys, delta.values, delta.valid)
     return map_fn(kv, delta.sign)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(5, 6))
 def _accumulate(reducer: Reducer, key_cap: int, backend, edges: Edges,
                 affected_keys: jax.Array, old_acc: Any, old_counts: jax.Array):
-    """Fold the delta edges' contribution into the old accumulators."""
+    """Fold the delta edges' contribution into the old accumulators.
+
+    ``old_acc``/``old_counts`` are donated: they are gathered fresh per
+    refresh and alias the ``acc``/``counts`` outputs exactly, so XLA reuses
+    the buffers instead of copying.
+    """
+    jitcache.count_trace("accumulator._accumulate")
     if reducer.kind in ("sum", "mean"):
         # signed contribution: deletions subtract (group inverse)
         signf = edges.sign.astype(jnp.float32)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, make_kv, segment_reduce, sort_edges,
 )
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 # map_fn(kv, record_sign) -> Edges.  Fanout must be static; helpers below
 # derive globally unique MKs from (record id, slot).
@@ -62,6 +62,7 @@ def make_mk(record_ids: jax.Array, slot: int, fanout: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def _run(spec_static, preserve: bool, inp: KV, record_sign: jax.Array):
+    jitcache.count_trace("engine._run")
     map_fn, reducer, num_keys, backend = spec_static
     edges = map_fn(inp, record_sign)
     acc, counts = segment_reduce(reducer, edges.k2, edges.v2, edges.valid,

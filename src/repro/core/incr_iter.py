@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.incremental import (
-    DeltaKV, _merge_reduce, _pad_edges, apply_delta_host,
+    DeltaKV, _combine_edges, _merge_reduce, apply_delta_host,
 )
 from repro.core.iterative import (
     IterSpec, State, run_iterative,
@@ -43,7 +43,7 @@ from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, edges_to_host, next_bucket, sort_edges,
 )
 from repro.core.mrbg_store import MRBGStore
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 _IK = np.int32(2**31 - 1)
 
@@ -246,16 +246,13 @@ class IncrIterJob:
             pmk = np.zeros(0, np.int32)
 
         key_cap = next_bucket(affected.size, 64)
-        pres = _pad_edges(pk2, pmk, pv2, np.ones(pk2.shape[0], np.int8),
-                          next_bucket(max(int(pk2.shape[0]), 1), 64))
-        delt = _pad_edges(dh["k2"], dh["mk"], v2_t,
-                          np.asarray(dh["sign"], np.int8),
-                          next_bucket(max(int(dh["k2"].shape[0]), 1), 64))
+        combined = _combine_edges(pk2, pmk, pv2, dh["k2"], dh["mk"], v2_t,
+                                  np.asarray(dh["sign"], np.int8))
         keys_pad = np.full(key_cap, _IK, np.int32)
         keys_pad[:affected.size] = affected.astype(np.int32)
 
         merged, values, counts = _merge_reduce(spec.reducer, key_cap, bk,
-                                               pres, delt,
+                                               combined,
                                                jnp.asarray(keys_pad))
 
         # preserve merged chunks
@@ -339,6 +336,7 @@ import functools
 def _delta_map_iter(spec_static, kv: KV, record_ids, sign, sel_dks,
                     state_values):
     """Prime Map over a selected subset of structure records."""
+    jitcache.count_trace("incr_iter._delta_map_iter")
     map_fn, replicate, backend = spec_static
     if replicate:
         dv = state_values
@@ -351,6 +349,7 @@ def _delta_map_iter(spec_static, kv: KV, record_ids, sign, sel_dks,
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _concat_edges(a: Edges, b: Edges, backend: Optional[str] = None) -> Edges:
+    jitcache.count_trace("incr_iter._concat_edges")
     return sort_edges(Edges(
         jnp.concatenate([a.k2, b.k2]), jnp.concatenate([a.mk, b.mk]),
         jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a.v2, b.v2),

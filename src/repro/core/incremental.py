@@ -33,7 +33,7 @@ from repro.core.kvstore import (
     next_bucket, segment_reduce, sort_edges,
 )
 from repro.core.mrbg_store import MRBGStore
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 
 class DeltaKV(NamedTuple):
@@ -74,6 +74,29 @@ def make_delta(record_ids, values, sign, *, keys=None,
     return DeltaKV(keys, record_ids,
                    jax.tree.map(jnp.asarray, values),
                    jnp.asarray(valid, jnp.bool_), jnp.asarray(sign, jnp.int8))
+
+
+def pad_delta(delta: DeltaKV, capacity: int) -> DeltaKV:
+    """Pad a delta to a bucketed row capacity (padding rows are invalid).
+
+    Every consumer of a :class:`DeltaKV` masks on ``valid``, so padding is
+    semantically inert; what it buys is *shape discipline*: deltas whose
+    row counts land in the same bucket share one traced/compiled refresh
+    program instead of retracing per distinct row count.
+    """
+    n = delta.capacity
+    if capacity < n:
+        raise ValueError(f"pad_delta capacity {capacity} < delta rows {n}")
+    if capacity == n:
+        return delta
+
+    def ext(a):
+        pad = jnp.zeros((capacity - n,) + a.shape[1:], a.dtype)
+        return jnp.concatenate([a, pad])
+
+    return DeltaKV(ext(delta.keys), ext(delta.record_ids),
+                   jax.tree.map(ext, delta.values),
+                   ext(delta.valid), ext(delta.sign))
 
 
 def apply_delta_host(keys: np.ndarray, values: Dict[str, np.ndarray],
@@ -187,29 +210,29 @@ def _v2_tree(v2_dict, template):
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _delta_map(spec_static, delta: DeltaKV) -> Edges:
+    jitcache.count_trace("incremental._delta_map")
     map_fn, backend = spec_static
     kv = KV(delta.keys, delta.values, delta.valid)
     edges = map_fn(kv, delta.sign)
     return sort_edges(edges, backend=backend)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3,))
 def _merge_reduce(reducer: Reducer, key_cap: int, backend: Optional[str],
-                  pres: Edges, delta: Edges, affected_keys: jax.Array):
+                  combined: Edges, affected_keys: jax.Array):
     """Join preserved chunks with delta edges; reduce affected groups.
 
+    ``combined`` holds preserved rows first, then delta rows (so that the
+    stable shuffle sort leaves equal-(k2,mk) delta rows *after* the
+    preserved version and last-writer-wins overrides).  It is donated:
+    the buffers are built fresh per refresh and the sorted merge aliases
+    them in place instead of paying another O(capacity) copy.
     ``affected_keys`` is sorted ascending, padded with INVALID_KEY.
     Returns (merged edges [sorted, valid-masked], values pytree [key_cap],
     counts [key_cap]).
     """
-    # concat; preserved rows first so that equal-(k2,mk) delta rows override
-    k2 = jnp.concatenate([pres.k2, delta.k2])
-    mk = jnp.concatenate([pres.mk, delta.mk])
-    valid = jnp.concatenate([pres.valid, delta.valid])
-    sign = jnp.concatenate([pres.sign, delta.sign])
-    v2 = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), pres.v2, delta.v2)
-    merged = sort_edges(Edges(k2, mk, v2, valid, sign), num_keys=2,
-                        backend=backend)
+    jitcache.count_trace("incremental._merge_reduce")
+    merged = sort_edges(combined, num_keys=2, backend=backend)
 
     # last-writer-wins per (k2, mk); tombstones delete
     nk2 = jnp.roll(merged.k2, -1)
@@ -253,17 +276,14 @@ def incremental_onestep(spec: JobSpec, delta: DeltaKV, store: MRBGStore,
 
     # 4-5) pad to buckets and run the jitted merge+reduce
     key_cap = next_bucket(affected.size, 64)
-    pres_cap = next_bucket(max(int(pk2.shape[0]), 1), 64)
-    delta_cap = next_bucket(max(int(dh["k2"].shape[0]), 1), 64)
-
-    pres = _pad_edges(pk2, pmk, pv2, np.ones(pk2.shape[0], np.int8), pres_cap)
     dsign = np.asarray(dh["sign"], np.int8)
-    delt = _pad_edges(dh["k2"], dh["mk"], _v2_dict(dh["v2"]), dsign, delta_cap)
+    combined = _combine_edges(pk2, pmk, pv2,
+                              dh["k2"], dh["mk"], _v2_dict(dh["v2"]), dsign)
     keys_pad = np.full(key_cap, np.int32(2**31 - 1), np.int32)
     keys_pad[:affected.size] = affected.astype(np.int32)
 
-    merged, values, counts = _merge_reduce(spec.reducer, key_cap, bk, pres,
-                                           delt, jnp.asarray(keys_pad))
+    merged, values, counts = _merge_reduce(spec.reducer, key_cap, bk,
+                                           combined, jnp.asarray(keys_pad))
 
     # 6) preserve merged chunks + patch results
     mh = edges_to_host(merged)
@@ -290,6 +310,38 @@ def _pad_edges(k2: np.ndarray, mk: np.ndarray, v2: Dict[str, np.ndarray],
     for name, a in v2.items():
         buf = np.zeros((cap,) + a.shape[1:], a.dtype)
         buf[:n] = a
+        out_v2[name] = buf
+    return Edges(jnp.asarray(out_k2), jnp.asarray(out_mk),
+                 jax.tree.map(jnp.asarray, out_v2),
+                 jnp.asarray(valid), jnp.asarray(out_sign))
+
+
+def _combine_edges(pk2: np.ndarray, pmk: np.ndarray,
+                   pv2: Dict[str, np.ndarray],
+                   dk2: np.ndarray, dmk: np.ndarray,
+                   dv2: Dict[str, np.ndarray], dsign: np.ndarray,
+                   minimum: int = 64) -> Edges:
+    """One bucketed host buffer: preserved rows first, then delta rows.
+
+    Feeding :func:`_merge_reduce` a single pre-concatenated buffer (instead
+    of two separately padded ones concatenated on device) keeps the shape
+    space one-dimensional — one bucket per *total* edge count — and lets
+    the jit donate the buffer to the in-place shuffle sort.
+    """
+    n_p, n_d = int(pk2.shape[0]), int(dk2.shape[0])
+    cap = next_bucket(max(n_p + n_d, 1), minimum)
+    ik = np.int32(2**31 - 1)
+    out_k2 = np.full(cap, ik, np.int32)
+    out_k2[:n_p] = pk2; out_k2[n_p:n_p + n_d] = dk2
+    out_mk = np.full(cap, ik, np.int32)
+    out_mk[:n_p] = pmk; out_mk[n_p:n_p + n_d] = dmk
+    out_sign = np.zeros(cap, np.int8)
+    out_sign[:n_p] = 1; out_sign[n_p:n_p + n_d] = dsign
+    valid = np.zeros(cap, bool); valid[:n_p + n_d] = True
+    out_v2 = {}
+    for name, a in dv2.items():
+        buf = np.zeros((cap,) + a.shape[1:], a.dtype)
+        buf[:n_p] = pv2[name]; buf[n_p:n_p + n_d] = a
         out_v2[name] = buf
     return Edges(jnp.asarray(out_k2), jnp.asarray(out_mk),
                  jax.tree.map(jnp.asarray, out_v2),

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.kvstore import (
     KV, Edges, Reducer, finalize_reduce, segment_reduce, sort_edges,
 )
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 # prime Map: map_fn(struct_kv, state_dv, record_sign) -> Edges
 #   state_dv is the gathered DV pytree aligned to the structure records
@@ -94,6 +94,7 @@ class State:
 def _iter_step(spec_static, preserve: bool, struct: KV, state_values: Any,
                dks: jax.Array):
     """One prime Map -> shuffle -> prime Reduce pass over the full input."""
+    jitcache.count_trace("iterative._iter_step")
     map_fn, reducer, project, num_state, replicate, backend = spec_static
     if replicate:
         dv = state_values

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.incremental import DeltaKV, make_delta
 from repro.core.kvstore import INVALID_KEY, next_bucket
-from repro.kernels import ops
+from repro.kernels import jitcache, ops
 
 
 class CoalesceResult(NamedTuple):
@@ -51,6 +51,7 @@ class CoalesceResult(NamedTuple):
 def _coalesce_kernel(cap: int, backend: Optional[str], rid: jax.Array,
                      sign: jax.Array, valid: jax.Array):
     """Device part: sort + group-boundary flags + per-record net sign."""
+    jitcache.count_trace("stream._coalesce_kernel")
     iota = jnp.arange(cap, dtype=jnp.int32)
     rid_m = jnp.where(valid, rid, INVALID_KEY)
     srt = ops.sort_pairs(rid_m, iota, payload=(sign, valid), num_keys=2,

@@ -22,6 +22,8 @@ class StreamMetrics:
         self.busy_seconds = 0.0          # time spent inside refreshes
         self.rows_in = 0                 # delta rows ingested
         self.rows_engine = 0             # rows surviving the coalescer
+        self.rows_rejected = 0           # rows refused at ingest (bad ids)
+        self.retrace_batches = 0         # batches that traced a jit kernel
         self.batches = 0
         self.refreshes: Dict[str, int] = {}   # action -> count
         self.compactions = 0
@@ -33,11 +35,12 @@ class StreamMetrics:
     # -- recording ---------------------------------------------------------
     def observe_batch(self, n_in: int, n_engine: int, action: str,
                       latency_s: float, refresh_s: float,
-                      epoch: int = -1) -> None:
+                      epoch: int = -1, retraced: bool = False) -> None:
         with self._lock:
             self.rows_in += n_in
             self.rows_engine += n_engine
             self.batches += 1
+            self.retrace_batches += int(retraced)
             self.refreshes[action] = self.refreshes.get(action, 0) + 1
             self.busy_seconds += refresh_s
             self.last_epoch = max(self.last_epoch, epoch)
@@ -51,6 +54,11 @@ class StreamMetrics:
         with self._lock:
             self.compactions += 1
             self.bytes_reclaimed += bytes_reclaimed
+
+    def observe_rejected(self, n_rows: int) -> None:
+        """Rows refused at ingest validation (e.g. out-of-range ids)."""
+        with self._lock:
+            self.rows_rejected += n_rows
 
     # -- reading -----------------------------------------------------------
     @staticmethod
@@ -83,7 +91,9 @@ class StreamMetrics:
                 "rows_engine": self.rows_engine,
                 "coalesce_savings": 1.0 - (self.rows_engine /
                                            max(self.rows_in, 1)),
+                "rows_rejected": self.rows_rejected,
                 "batches": self.batches,
+                "retrace_batches": self.retrace_batches,
                 "refreshes": dict(self.refreshes),
                 "busy_seconds": self.busy_seconds,
                 "updates_per_sec": self.rows_in / self.busy_seconds

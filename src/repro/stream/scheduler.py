@@ -49,6 +49,7 @@ class RefreshScheduler:
         self._sec_per_rerun: Optional[float] = None       # EWMA, rerun path
         self.decisions: List[RefreshDecision] = []        # bounded tail
         self.action_counts = {a: 0 for a in ACTIONS}
+        self.compile_skips = 0       # observations excluded (compile-tainted)
 
     # -- cost model --------------------------------------------------------
     def _ewma(self, old: Optional[float], new: float) -> float:
@@ -61,8 +62,19 @@ class RefreshScheduler:
                                          initial_run_seconds)
 
     def observe(self, action: str, n_delta_rows: int,
-                seconds: float) -> None:
-        """Fold one measured refresh into the model."""
+                seconds: float, *, compiled: bool = False) -> None:
+        """Fold one measured refresh into the model.
+
+        ``compiled=True`` marks an observation whose wall-clock includes
+        trace + XLA compile time (a cold shape bucket).  Folding such a
+        one-off into the EWMA would make the touched path look orders of
+        magnitude slower than its steady state and skew update-vs-rerun
+        decisions for many batches; it is excluded instead (counted in
+        ``compile_skips``).
+        """
+        if compiled:
+            self.compile_skips += 1
+            return
         if action == "rerun":
             self._sec_per_rerun = self._ewma(self._sec_per_rerun, seconds)
         elif n_delta_rows > 0:

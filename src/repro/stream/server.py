@@ -17,6 +17,7 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.kernels import jitcache
 from repro.stream.session import StreamSession
 
 
@@ -37,7 +38,14 @@ class MultiSessionServer:
     # -- tenancy -----------------------------------------------------------
     def add(self, tenant: StreamSession) -> StreamSession:
         """Register a tenant; the server owns its scheduling from now on
-        (the tenant must not run its own worker thread)."""
+        (the tenant must not run its own worker thread).
+
+        Admission runs the tenant's initial job — and, when its
+        ``StreamConfig(prewarm=True)``, compiles its delta bucket ladder —
+        before the tenant enters the sweep, so a newly added tenant never
+        pays cold-compile latency out of the shared scheduler thread's
+        first quantum.
+        """
         if tenant.name in self.tenants:
             raise ValueError(f"tenant {tenant.name!r} already registered")
         if tenant._thread is not None:
@@ -145,11 +153,17 @@ class MultiSessionServer:
                 t._flush = False
 
     def stats(self) -> Dict[str, object]:
+        tenants = {n: t.metrics.snapshot() for n, t in self.tenants.items()}
         return {
-            "tenants": {n: t.metrics.snapshot()
-                        for n, t in self.tenants.items()},
+            "tenants": tenants,
             "total_store_bytes": self.total_store_bytes(),
             "store_budget_bytes": self.store_budget_bytes,
             "over_budget": self._over_budget,
             "sweeps": self._sweeps,
+            # process-wide latency-tail telemetry (shared jit caches)
+            "retrace_batches": sum(t["retrace_batches"]
+                                   for t in tenants.values()),
+            "rows_rejected": sum(t["rows_rejected"]
+                                 for t in tenants.values()),
+            "jit": jitcache.snapshot(),
         }

@@ -26,8 +26,11 @@ import numpy as np
 from repro.api.config import RunConfig, StreamConfig
 from repro.api.session import Session, Spec
 from repro.core.incremental import apply_delta_host, make_delta
-from repro.core.kvstore import KV
-from repro.stream.coalesce import CoalesceResult, coalesce, concat_records
+from repro.core.kvstore import KV, next_bucket
+from repro.kernels import jitcache
+from repro.stream.coalesce import (
+    CoalesceResult, coalesce, coalesce_rows, concat_records,
+)
 from repro.stream.metrics import StreamMetrics
 from repro.stream.scheduler import RefreshScheduler
 from repro.stream.source import DeltaRecord, DeltaSource
@@ -66,6 +69,7 @@ class StreamSession:
         self._thread: Optional[threading.Thread] = None
         self._managed = False                # scheduled by a server
         self._error: Optional[BaseException] = None
+        self._prewarmed = False
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, background: bool = True) -> "StreamSession":
@@ -79,12 +83,67 @@ class StreamSession:
             if self.session.epoch < 0:
                 rep = self.session.run(self._mirror_kv())
                 self.scheduler.seed(rep.seconds)
+            if self.sconfig.prewarm and not self._prewarmed:
+                self._prewarm()
+                self._prewarmed = True
         if background and self._thread is None:
             self._stop_evt.clear()           # allow stop() -> start() cycles
             self._thread = threading.Thread(
                 target=self._loop, name=f"stream-{self.name}", daemon=True)
             self._thread.start()
         return self
+
+    def _prewarm(self) -> None:
+        """Compile the delta bucket ladder before real traffic arrives.
+
+        Pushes numerically inert deltas ('-' then '+' of a record's current
+        mirror value — a no-op on every refresh path) through
+        ``session.update()`` at each power-of-two row capacity of the
+        ladder, so the first real micro-batch of any bucket hits an
+        already-cached executable instead of paying trace + compile time.
+        """
+        rows = np.nonzero(self._mvalid)[0]
+        if rows.size == 0:
+            return
+        minimum = self.session.config.delta_bucket_min
+        top = next_bucket(
+            self.sconfig.prewarm_rows or self.sconfig.max_batch_records,
+            minimum)
+        floor = next_bucket(1, max(minimum, 2))
+        backend = self.session.config.backend
+        # ladder sizes: one full noop per row bucket above the minimum
+        # (above the floor the valid count pins the downstream edge bucket),
+        # plus a doubling sub-ladder inside the minimum bucket — there the
+        # row capacity is clamped to the floor while the *valid* count (and
+        # with it the edge bucket) still varies freely
+        sizes, v = [], 2
+        while v < floor:
+            sizes.append(v)
+            v *= 2
+        while v <= top:
+            sizes.append(v)
+            v *= 2
+        for size in sizes:
+            delta = self._noop_delta(size, rows)
+            if self.sconfig.coalesce:
+                # real batches hit the coalescer kernel first; trace it at
+                # this bucket too (its output is discarded — the engine is
+                # warmed with the delta below)
+                coalesce_rows(np.asarray(delta.record_ids),
+                              {n: np.asarray(a)
+                               for n, a in delta.values.items()},
+                              np.asarray(delta.sign), backend=backend)
+            self.session.update(delta)
+
+    def _noop_delta(self, cap: int, rows: np.ndarray):
+        """A ``cap``-row delta of '-'/'+' pairs replaying current values."""
+        sel = rows[np.arange(cap // 2) % rows.size]
+        rid = np.repeat(sel, 2).astype(np.int32)
+        values = {n: np.repeat(a[sel], 2, axis=0)
+                  for n, a in self._mvalues.items()}
+        sign = np.tile(np.array([-1, 1], np.int8), cap // 2)
+        keys = np.repeat(self._mkeys[sel], 2).astype(np.int32)
+        return make_delta(rid, values, sign, keys=keys)
 
     def stop(self) -> None:
         """Stop the worker; rows not yet processed stay buffered."""
@@ -110,8 +169,24 @@ class StreamSession:
 
     def submit_record(self, record: DeltaRecord,
                       timeout: Optional[float] = None) -> None:
+        """Validate and enqueue one record; raises ``ValueError`` on record
+        ids outside the input mirror (the batch it would have joined — and
+        the worker thread — are unaffected)."""
+        self._validate_record(record)
         self._inbox.put((record, time.perf_counter()), block=True,
                         timeout=timeout)
+
+    def _validate_record(self, rec: DeltaRecord) -> None:
+        rid = np.asarray(rec.record_ids)
+        if rid.size == 0:
+            return
+        lo, hi = int(rid.min()), int(rid.max())
+        if lo < 0 or hi >= self._mkeys.shape[0]:
+            bad = hi if hi >= self._mkeys.shape[0] else lo
+            raise ValueError(
+                f"record id {bad} outside the input mirror capacity "
+                f"{self._mkeys.shape[0]}; grow the initial data's padding "
+                f"to stream inserts")
 
     def _ingest(self) -> bool:
         """Move rows from the inbox and the source into the pending batch
@@ -135,6 +210,13 @@ class StreamSession:
                 not self.source.exhausted:
             now = time.perf_counter()
             for rec in self.source.poll(budget):
+                try:
+                    self._validate_record(rec)
+                except ValueError:
+                    # drop the bad record, keep the stream (and the other
+                    # records of this poll) alive
+                    self.metrics.observe_rejected(rec.n_rows)
+                    continue
                 self._pending.append((rec, now))
                 self._pending_rows += rec.n_rows
                 progressed = True
@@ -192,18 +274,20 @@ class StreamSession:
                 rids, vals, signs = concat_records(records)
                 res = CoalesceResult(make_delta(rids, vals, signs),
                                      n_in, n_in, 0, 0, 0)
-            if res.delta is not None:
-                rid = np.asarray(res.delta.record_ids)
-                if rid.size and int(rid.max()) >= self._mkeys.shape[0]:
-                    raise ValueError(
-                        f"record id {int(rid.max())} outside the input "
-                        f"mirror capacity {self._mkeys.shape[0]}; grow the "
-                        f"initial data's padding to stream inserts")
-
             with self._lock:
                 if res.delta is None:          # everything cancelled out
-                    action, refresh_s = "noop", 0.0
+                    action, refresh_s, retraced = "noop", 0.0, False
                 else:
+                    # mirror mutation must be rollback-able: rerun() consumes
+                    # the updated mirror, so it cannot simply be deferred
+                    # until after the refresh succeeds
+                    rid = np.asarray(res.delta.record_ids)
+                    dvalid = np.asarray(res.delta.valid)
+                    rows = np.unique(rid[dvalid])
+                    saved = (self._mkeys[rows].copy(),
+                             {n: a[rows].copy()
+                              for n, a in self._mvalues.items()},
+                             self._mvalid[rows].copy())
                     apply_delta_host(self._mkeys, self._mvalues,
                                      self._mvalid, res.delta)
                     st = self.session.store
@@ -211,17 +295,31 @@ class StreamSession:
                         res.n_out, state_rows=int(self._mvalid.sum()),
                         store_file_bytes=st.file_bytes() if st else 0,
                         store_live_bytes=st.live_bytes() if st else 0)
-                    if decision.action == "update":
-                        rep = self.session.update(res.delta)
-                    else:
-                        rep = self.session.rerun(self._mirror_kv())
+                    gen0 = jitcache.generation()
+                    try:
+                        if decision.action == "update":
+                            rep = self.session.update(res.delta)
+                        else:
+                            rep = self.session.rerun(self._mirror_kv())
+                    except BaseException:
+                        # failed refresh: put the mirror back so it keeps
+                        # matching the state the engine actually computed
+                        skeys, svals, svalid = saved
+                        self._mkeys[rows] = skeys
+                        for n, a in self._mvalues.items():
+                            a[rows] = svals[n]
+                        self._mvalid[rows] = svalid
+                        raise
+                    # a bumped trace generation marks this batch's
+                    # wall-clock as compile-tainted
+                    retraced = jitcache.generation() != gen0
                     self.scheduler.observe(decision.action, res.n_out,
-                                           rep.seconds)
+                                           rep.seconds, compiled=retraced)
                     action, refresh_s = decision.action, rep.seconds
             self.metrics.observe_batch(
                 n_in=n_in, n_engine=res.n_out, action=action,
                 latency_s=time.perf_counter() - first_arrival,
-                refresh_s=refresh_s, epoch=epoch)
+                refresh_s=refresh_s, epoch=epoch, retraced=retraced)
         finally:
             self._busy = False
 

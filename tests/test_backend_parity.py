@@ -15,7 +15,7 @@ import pytest
 
 from _hyp import given, settings, st  # hypothesis, or seeded fallback
 
-from repro.core.incremental import _merge_reduce, _pad_edges
+from repro.core.incremental import _combine_edges, _merge_reduce
 from repro.core.kvstore import (
     INVALID_KEY, make_edges, max_reducer, mean_reducer, min_reducer,
     segment_reduce, sort_edges, sum_reducer,
@@ -157,14 +157,14 @@ def test_merge_reduce_tombstone_parity(seed):
     dv = {"v": rng.integers(-8, 9, ndelta).astype(np.float32)}
     dsign = np.where(rng.random(ndelta) < 0.4, -1, 1).astype(np.int8)
 
-    pres = _pad_edges(pk2, pmk, pv, np.ones(npres, np.int8), 64)
-    delt = _pad_edges(dk2, dmk, dv, dsign, 64)
     affected = np.unique(np.concatenate([pk2, dk2]))
     keys_pad = np.full(key_cap, np.int32(2**31 - 1), np.int32)
     keys_pad[:affected.size] = affected
 
     def run(bk):
-        return _merge_reduce(sum_reducer(), key_cap, bk, pres, delt,
+        # combined buffer is donated, so build it fresh per backend
+        combined = _combine_edges(pk2, pmk, pv, dk2, dmk, dv, dsign)
+        return _merge_reduce(sum_reducer(), key_cap, bk, combined,
                              jnp.asarray(keys_pad))
 
     (mx, vx, cx), (mp, vp, cp) = _both(run)

@@ -221,7 +221,13 @@ def test_worker_error_surfaces_on_drain():
     ss = StreamSession(spec, data,
                        stream=StreamConfig(max_batch_delay=0.0))
     with ss:
-        ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])  # bad rid
+        ss.drain(timeout=30)                 # let the initial run settle
+
+        def boom(delta):
+            raise RuntimeError("injected engine failure")
+        ss.session.update = boom
+        ss.session.rerun = boom
+        ss.submit([0], {"w": np.zeros((1, 3), np.int32)}, [1])
         with pytest.raises(RuntimeError, match="worker.*died"):
             ss.drain(timeout=30)
         with pytest.raises(RuntimeError, match="worker.*died"):
@@ -266,14 +272,146 @@ def test_tenant_drain_under_running_server():
 
 
 def test_record_id_outside_mirror_rejected():
+    """A bad record id is refused at submit() time — before it can join a
+    batch and kill the worker."""
     docs = np.zeros((4, 3), np.int32)
     spec, data = wc.make_job(docs, 8)
     ss = StreamSession(spec, data,
                        stream=StreamConfig(max_batch_delay=0.0))
     ss.start(background=False)
-    ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])
     with pytest.raises(ValueError, match="mirror capacity"):
+        ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])
+    with pytest.raises(ValueError, match="outside"):
+        ss.submit([-1], {"w": np.zeros((1, 3), np.int32)}, [1])
+
+
+def test_bad_record_keeps_stream_alive():
+    """One rejected record must not drop the batch or the worker: later
+    submissions still process and the result stays correct."""
+    rng = np.random.default_rng(3)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0))
+    with ss:
+        with pytest.raises(ValueError, match="mirror capacity"):
+            ss.submit([99], {"w": np.zeros((1, 3), np.int32)}, [1])
+        mirror = docs.copy()
+        new = rng.integers(0, 16, (3,)).astype(np.int32)
+        ss.submit([5, 5], {"w": np.stack([mirror[5], new])}, [-1, 1])
+        mirror[5] = new
+        ss.drain(timeout=60)                 # worker is alive and consuming
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_source_bad_record_rejected_stream_continues():
+    """A polled source record with out-of-range ids is dropped (counted in
+    rows_rejected); the stream keeps processing the records around it."""
+    from repro.stream import QueueSource
+    rng = np.random.default_rng(8)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    mirror = docs.copy()
+    new = rng.integers(0, 16, (3,)).astype(np.int32)
+    src = QueueSource()
+    src.push(DeltaRecord(record_ids=[42], sign=[1],
+                         values={"w": np.zeros((1, 3), np.int32)}, epoch=0))
+    src.push(DeltaRecord(record_ids=[2, 2], sign=[-1, 1],
+                         values={"w": np.stack([mirror[2], new])}, epoch=1))
+    mirror[2] = new
+    src.seal()
+    ss = StreamSession(spec, data, source=src,
+                       stream=StreamConfig(max_batch_delay=0.0))
+    ss.start(background=False)
+    ss.drain(timeout=60)
+    assert ss.metrics.rows_rejected == 1
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_failed_refresh_rolls_back_mirror():
+    """If the refresh raises, the input mirror must be rolled back so it
+    keeps matching the state the engine actually computed (no silent
+    mirror/engine divergence on a later rerun or snapshot)."""
+    rng = np.random.default_rng(12)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    ss.start(background=False)
+    mirror = docs.copy()
+
+    real_update = ss.session.update
+
+    def boom(delta):
+        raise RuntimeError("injected refresh failure")
+    ss.session.update = boom
+    new = rng.integers(0, 16, (3,)).astype(np.int32)
+    ss.submit([4, 4], {"w": np.stack([mirror[4], new])}, [-1, 1])
+    with pytest.raises(RuntimeError, match="injected"):
         ss.step()
+    # mirror still reflects exactly what result was computed from
+    np.testing.assert_array_equal(
+        np.asarray(ss.mirror_kv().values["w"]), mirror)
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+    # recovered engine: the next batch processes against consistent state
+    ss.session.update = real_update
+    ss.submit([4, 4], {"w": np.stack([mirror[4], new])}, [-1, 1])
+    mirror[4] = new
+    ss.drain(timeout=60)
+    np.testing.assert_array_equal(
+        np.asarray(ss.mirror_kv().values["w"]), mirror)
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_adversarial_burst_coalesces():
+    """Repeated-record update bursts inside one micro-batch must cancel in
+    the coalescer: fewer engine rows than ingested rows, same result."""
+    rng = np.random.default_rng(13)
+    docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 16)
+    ss = StreamSession(spec, data,
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    ss.start(background=False)
+    mirror = docs.copy()
+    # one record rewritten 4 times in a single batch: 8 rows in, 2 needed
+    row, cur = 3, mirror[3].copy()
+    rids, bufs, signs = [], [], []
+    for _ in range(4):
+        new = rng.integers(0, 16, (3,)).astype(np.int32)
+        rids += [row, row]
+        bufs += [cur, new]
+        signs += [-1, 1]
+        cur = new
+    mirror[row] = cur
+    ss.submit(rids, {"w": np.stack(bufs)}, signs)
+    ss.drain(timeout=60)
+    snap = ss.metrics.snapshot()
+    assert snap["rows_in"] == 8
+    assert snap["rows_engine"] == 2          # first '-', last '+'
+    assert snap["coalesce_savings"] > 0
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+def test_scheduler_excludes_compile_tainted_observations():
+    """A one-off compile-dominated first batch must not flip the online
+    cost model's update-vs-rerun decision."""
+    sch = RefreshScheduler(StreamConfig(policy="latency", crossover=0.25))
+    sch.observe("update", 10, 0.010)         # steady: 1 ms per delta row
+    sch.observe("rerun", 50, 0.005)          # steady rerun: 5 ms
+    assert sch.decide(2, 1000).action == "update"
+    # a cold-bucket batch: 5 s wall-clock, almost all of it XLA compile
+    sch.observe("update", 10, 5.0, compiled=True)
+    assert sch.compile_skips == 1
+    assert sch.decide(2, 1000).action == "update"    # model unpolluted
+    # the same observation folded in would have flipped the decision
+    bad = RefreshScheduler(StreamConfig(policy="latency", crossover=0.25))
+    bad.observe("update", 10, 0.010)
+    bad.observe("rerun", 50, 0.005)
+    bad.observe("update", 10, 5.0)
+    assert bad.decide(2, 1000).action == "rerun"
 
 
 def test_file_tail_source_roundtrip_and_rewind(tmp_path):
