@@ -18,8 +18,8 @@ execution via ``RunConfig(mesh=...)``; the engine picks the refresh path
 (fine-grain MRBGraph merge, accumulator fast path, CPC-filtered delta
 propagation, or auto MRBG-off fallback recomputation) internally.
 """
-from repro.api.config import RunConfig, StreamConfig
-from repro.api.report import MODES, RunReport
+from repro.api.config import MeshConfig, RunConfig, StreamConfig
+from repro.api.report import MODES, RunReport, ShuffleStats
 from repro.api.session import Session
 
 # the declaration vocabulary, re-exported so callers need only repro.api
@@ -32,7 +32,8 @@ from repro.core.kvstore import (
 )
 
 __all__ = [
-    "Session", "RunConfig", "StreamConfig", "RunReport", "MODES",
+    "Session", "RunConfig", "MeshConfig", "StreamConfig", "RunReport",
+    "ShuffleStats", "MODES",
     "JobSpec", "IterSpec", "State", "default_difference",
     "DeltaKV", "make_delta",
     "KV", "Edges", "Reducer", "make_kv", "make_edges",

@@ -48,6 +48,33 @@ def _store_from_npz(num_keys: int, path: Path, meta: Dict,
     return store
 
 
+def _save_shard_stores(drv, tmp: Path) -> None:
+    """Per-shard MRBG slices of a distributed driver (local-key space, so
+    only a mesh of the same part count can reuse them)."""
+    metas = None
+    if drv.stores is not None:
+        metas = [_store_to_npz(s, tmp / f"mrbg_{p:03d}.npz")
+                 for p, s in enumerate(drv.stores)]
+    (tmp / "shards.json").write_text(json.dumps(
+        {"n_parts": drv.n_parts, "mrbg_on": drv.mrbg_on, "stores": metas}))
+
+
+def _load_shard_stores(drv, d: Path, cfg: RunConfig) -> bool:
+    """Rebuild ``drv.stores`` from a snapshot; False when the snapshot was
+    taken with a different part count (local keys don't transfer)."""
+    sj = d / "shards.json"
+    if not sj.exists():
+        return False
+    meta = json.loads(sj.read_text())
+    if meta["stores"] is None or meta["n_parts"] != drv.n_parts:
+        return False
+    drv.stores = [
+        _store_from_npz(drv.rows, d / f"mrbg_{p:03d}.npz", m, cfg)
+        for p, m in enumerate(meta["stores"])]
+    drv.mrbg_on = meta["mrbg_on"]
+    return True
+
+
 def _atomic_epoch_dir(root: Path, epoch: int):
     tmp = root / f"ep_{epoch:06d}.tmp"
     final = root / f"ep_{epoch:06d}"
@@ -120,10 +147,21 @@ def save_session(session, root: str) -> Path:
     elif drv.kind in ("plain-iter", "distributed"):
         tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
         state = drv.result()
+        extra = ({"cpc": drv.cpc_accum} if drv.kind == "distributed" else {})
         np.savez(tmp / "state.npz",
                  struct_keys=drv._keys, struct_valid=drv._valid,
                  **{f"sv_{n}": a for n, a in state.items()},
-                 **{f"st_{n}": a for n, a in drv._values.items()})
+                 **{f"st_{n}": a for n, a in drv._values.items()},
+                 **extra)
+        if drv.kind == "distributed":
+            _save_shard_stores(drv, tmp)
+        out = commit()
+    elif drv.kind == "distributed-onestep":
+        tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
+        view = drv.view
+        np.savez(tmp / "view.npz", valid=view.valid, counts=view.counts,
+                 **{f"v_{n}": a for n, a in view.values.items()})
+        _save_shard_stores(drv, tmp)
         out = commit()
     else:                                 # pragma: no cover
         raise ValueError(f"unknown driver kind {drv.kind!r}")
@@ -153,7 +191,7 @@ def load_session(cls, spec, root: str, config: Optional[RunConfig]):
         cfg = cfg.replace(plain_shuffle=True, mesh=None)
     elif kind == "incr-iter":
         cfg = cfg.replace(plain_shuffle=False, mesh=None)
-    elif kind == "distributed":
+    elif kind in ("distributed", "distributed-onestep"):
         if cfg.mesh is None:
             raise ValueError("restoring a distributed session requires "
                              "RunConfig(mesh=...) — meshes are not "
@@ -202,10 +240,29 @@ def load_session(cls, spec, root: str, config: Optional[RunConfig]):
         state = {k[3:]: sz[k] for k in sz.files if k.startswith("sv_")}
         if kind == "distributed":
             from repro.core.distributed import partition_state
-            drv.state_parts = partition_state(state, spec.num_state,
-                                              drv.n_parts)
+            drv.state_parts = {
+                n: np.array(a) for n, a in partition_state(
+                    state, spec.num_state, drv.n_parts).items()}
+            if "cpc" in sz.files:
+                drv.cpc_accum = sz["cpc"].copy()
+            drv._rebuild_rev()
+            # per-shard MRBG slices transfer only onto an equal part count;
+            # otherwise the next update() warm-converges and re-seeds them
+            if not _load_shard_stores(drv, d, cfg):
+                drv.stores = None
         else:
             drv.state = State(
                 {n: jnp.asarray(a) for n, a in state.items()},
                 jnp.ones(spec.num_state, jnp.bool_))
+    elif kind == "distributed-onestep":
+        d = _latest_epoch_dir(rootp)
+        vz = np.load(d / "view.npz")
+        values = {k[2:]: vz[k].copy() for k in vz.files if k.startswith("v_")}
+        drv.view = ResultView(spec.num_keys, values, vz["valid"].copy(),
+                              vz["counts"].copy())
+        if not _load_shard_stores(drv, d, cfg):
+            raise ValueError(
+                "distributed one-step snapshots store per-shard MRBG slices "
+                "in local-key space; restore with a mesh of the same part "
+                "count as the one that wrote the checkpoint")
     return session

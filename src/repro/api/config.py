@@ -12,8 +12,9 @@ dataclass consumed by :class:`repro.api.Session`.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, Optional, Union
 
 from jax.sharding import Mesh
 
@@ -22,6 +23,74 @@ from repro.core.mrbg_store import (
 )
 
 ONESTEP_PATHS = ("auto", "mrbg", "accumulator")
+REFRESH_MODES = ("fine", "warm")
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Validated distributed-execution knobs (§4.3), one object per mesh.
+
+    ``RunConfig(mesh=MeshConfig(mesh, ...))`` replaces the historical flat
+    knobs (``mesh_axis``/``pod_axis``/``shuffle_cap``/``partition_cap`` on
+    RunConfig), which remain as deprecation-warning aliases for one release.
+    """
+
+    # the jax.sharding.Mesh; duck-typed (anything exposing .shape works,
+    # which keeps unit tests mesh-free)
+    mesh: Any
+
+    # partition axis (+ optional pod axis flattened into one exchange axis)
+    axis: str = "data"
+    pod_axis: Optional[str] = None
+
+    # per (src, dst) shard edge capacity of the converge-loop all_to_all;
+    # overflow auto-regrows up the bucket ladder unless auto_grow=False
+    shuffle_cap: int = 4096
+    auto_grow: bool = True
+
+    # host-side structure-partition row capacity (None -> sized from data)
+    partition_cap: Optional[int] = None
+
+    # update() semantics under the mesh:
+    #   'fine' -> kv-pair-level delta refresh against per-shard MRBG slices
+    #             (delta-only exchange; §3.3/§5 per shard)
+    #   'warm' -> re-partition the host mirror and warm re-converge (the
+    #             pre-MeshConfig behavior; the Fig. 8 rerun-side baseline)
+    refresh: str = "fine"
+
+    def __post_init__(self):
+        shape = getattr(self.mesh, "shape", None)
+        if shape is None:
+            raise ValueError("MeshConfig.mesh must be a jax.sharding.Mesh "
+                             "(or expose .shape like one)")
+        if self.axis not in shape:
+            raise ValueError(f"mesh has no axis {self.axis!r} "
+                             f"(axes: {tuple(shape)})")
+        if self.pod_axis is not None:
+            if self.pod_axis not in shape:
+                raise ValueError(f"mesh has no pod axis {self.pod_axis!r} "
+                                 f"(axes: {tuple(shape)})")
+            if self.pod_axis == self.axis:
+                raise ValueError("pod_axis must differ from axis")
+        if self.shuffle_cap < 1:
+            raise ValueError("shuffle_cap must be >= 1")
+        if self.partition_cap is not None and self.partition_cap < 1:
+            raise ValueError("partition_cap must be >= 1")
+        if self.refresh not in REFRESH_MODES:
+            raise ValueError(f"refresh must be one of {REFRESH_MODES}, "
+                             f"got {self.refresh!r}")
+
+    @property
+    def n_parts(self) -> int:
+        shape = self.mesh.shape
+        return shape[self.axis] * (shape[self.pod_axis]
+                                   if self.pod_axis else 1)
+
+    def replace(self, **kw) -> "MeshConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_FLAT_MESH_KNOBS = ("mesh_axis", "pod_axis", "shuffle_cap", "partition_cap")
 
 
 @dataclass(frozen=True)
@@ -56,13 +125,15 @@ class RunConfig:
     #    structure data every iteration instead of keeping the loop warm
     plain_shuffle: bool = False
 
-    # -- distributed execution: a mesh turns the same spec into the
-    #    shard_map + all_to_all engine (§4.3); no separate entry point
-    mesh: Optional[Mesh] = None
-    mesh_axis: str = "data"
-    pod_axis: Optional[str] = None
-    shuffle_cap: int = 4096
-    partition_cap: Optional[int] = None          # None -> sized from data
+    # -- distributed execution: a MeshConfig turns the same spec into the
+    #    shard_map + all_to_all engine (§4.3); no separate entry point.
+    #    Passing a bare Mesh (optionally with the flat knobs below) is the
+    #    deprecated pre-MeshConfig spelling, normalized with a warning.
+    mesh: Optional[Union[Mesh, MeshConfig]] = None
+    mesh_axis: Optional[str] = None              # deprecated -> MeshConfig.axis
+    pod_axis: Optional[str] = None               # deprecated -> MeshConfig
+    shuffle_cap: Optional[int] = None            # deprecated -> MeshConfig
+    partition_cap: Optional[int] = None          # deprecated -> MeshConfig
 
     # -- checkpointing (§6): directory + cadence in epochs (0 = manual via
     #    Session.checkpoint only)
@@ -95,6 +166,33 @@ class RunConfig:
                              "Session._finish keeps the newest reports)")
         if self.delta_bucket_min < 1:
             raise ValueError("delta_bucket_min must be >= 1")
+        self._normalize_mesh()
+
+    def _normalize_mesh(self) -> None:
+        """Fold the deprecated flat mesh knobs into one MeshConfig."""
+        flat = {k: getattr(self, k) for k in _FLAT_MESH_KNOBS}
+        given = {k: v for k, v in flat.items() if v is not None}
+        if isinstance(self.mesh, MeshConfig):
+            if given:
+                raise ValueError(
+                    f"flat mesh knobs {tuple(given)} cannot be combined "
+                    f"with RunConfig(mesh=MeshConfig(...)); set them on "
+                    f"the MeshConfig instead")
+        elif self.mesh is not None:
+            warnings.warn(
+                "RunConfig(mesh=<Mesh>, mesh_axis=..., pod_axis=..., "
+                "shuffle_cap=..., partition_cap=...) is deprecated; pass "
+                "RunConfig(mesh=MeshConfig(mesh, axis=..., ...)) instead "
+                "(see the README migration table)",
+                DeprecationWarning, stacklevel=4)
+            kw = {"axis": given.pop("mesh_axis", None) or "data"}
+            kw.update(given)
+            object.__setattr__(self, "mesh", MeshConfig(self.mesh, **kw))
+        elif given:
+            raise ValueError(f"mesh knobs {tuple(given)} given without a "
+                             f"mesh")
+        for k in _FLAT_MESH_KNOBS:       # normalized away; replace()-stable
+            object.__setattr__(self, k, None)
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

@@ -26,7 +26,28 @@ MODES = (
     "i2",                 # incremental iterative refresh (§5)
     "iterMR-fallback",    # auto MRBG-off recomputation (§5.2)
     "distributed",        # shard_map + all_to_all prime loop (§4.3)
+    "distributed-incr",   # per-shard delta refresh, one-step (§3.3 on mesh)
+    "distributed-i2",     # per-shard delta refresh, iterative CPC (§5 on mesh)
+    "distributed-warm",   # mirror re-partition + warm re-converge fallback
 )
+
+
+@dataclass
+class ShuffleStats:
+    """Network-exchange telemetry of one epoch, uniform across modes.
+
+    Single-device paths report zeros (nothing crossed a wire); distributed
+    paths fill in the ``all_to_all`` traffic.  ``exchange_seconds`` is the
+    wall-clock of each exchange-bearing device program (host-observed, so
+    it upper-bounds the pure collective time).
+    """
+
+    edges_exchanged: int = 0       # valid edges through all_to_all this epoch
+    bytes_moved: int = 0           # edges * per-edge record bytes
+    dropped: int = 0               # edges lost to shuffle_cap (0 post-regrow)
+    exchange_seconds: List[float] = field(default_factory=list)
+    shuffle_cap: int = 0           # per (src,dst) capacity actually used
+    regrows: int = 0               # times the cap auto-regrew this epoch
 
 
 @dataclass
@@ -48,6 +69,9 @@ class RunReport:
     live_bytes: int = 0               # live chunk bytes
     store_batches: int = 0
     mrbg_on: bool = True              # False once §5.2 auto-off has tripped
+    # network-exchange telemetry: always present, zeros when nothing
+    # crossed a wire (single-device paths)
+    shuffle: ShuffleStats = field(default_factory=ShuffleStats)
     # dense output values; {} when the producer skipped materialization
     # (run/update return reports without it — read session.result instead)
     result: Dict[str, np.ndarray] = field(default_factory=dict)
@@ -63,4 +87,9 @@ class RunReport:
         if self.store_bytes:
             parts.append(f"store={self.store_bytes}B "
                          f"(live {self.live_bytes}B)")
+        if self.shuffle.edges_exchanged or self.shuffle.dropped:
+            parts.append(f"shuffle={self.shuffle.edges_exchanged}e/"
+                         f"{self.shuffle.bytes_moved}B"
+                         + (f" dropped={self.shuffle.dropped}"
+                            if self.shuffle.dropped else ""))
         return " ".join(parts)

@@ -20,7 +20,23 @@ Maps the paper's Hadoop runtime onto a TPU pod:
     key range (local key = K2 // P).
 
 Static capacities make the exchange shape-stable; overflowing edges are
-counted (and surfaced) rather than silently dropped.
+counted and the converge loop regrows the capacity up the bucket ladder
+(never silently dropped).
+
+Fine-grain refresh (kv-pair level, §3.3/§5 on the mesh) splits each epoch
+into two phases so the MRBG-Store can stay host-side:
+
+  1. *delta exchange* (:func:`make_delta_exchange_step`): delta rows are
+     partitioned by ``hash(project(SK))`` (Eq. 2) host-side, each shard
+     re-Maps its rows against its **local** state slice (co-located by
+     Eq. 1), and one ``all_to_all`` routes the emitted delta edges to their
+     owner shards.  Send capacity is the full per-shard edge capacity, so
+     the delta path can never drop edges.
+  2. *per-shard merge* (:func:`merge_shard_delta`): each shard's received
+     edges are merged against its local MRBG slice with the same bucketed
+     ``_combine_edges``/``_merge_reduce`` kernels the single-device
+     incremental path uses — which is what makes distributed refresh
+     bit-for-bit comparable with the single-device result.
 """
 from __future__ import annotations
 
@@ -34,10 +50,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.kvstore import (
-    INVALID_KEY, KV, Edges, Reducer, finalize_reduce, segment_reduce,
+    INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce,
+    next_bucket, segment_reduce, sort_edges,
 )
+from repro.core.incremental import _combine_edges, _merge_reduce, _v2_dict
 from repro.core.iterative import IterSpec, State
-from repro.kernels import ops
+from repro.core.mrbg_store import MRBGStore
+from repro.kernels import jitcache, ops
+
+_IK = np.int32(2**31 - 1)
 
 
 def partition_of(keys: jax.Array, n: int) -> jax.Array:
@@ -94,18 +115,82 @@ def unpartition_state(parts: Dict[str, np.ndarray], num_state: int):
 
 
 # ---------------------------------------------------------------------------
+# The exchange: bucket edges by owner partition + one all_to_all
+# ---------------------------------------------------------------------------
+
+def _exchange(edges: Edges, n_parts: int, cap: int, axes, bk: Optional[str],
+              mesh_shape=None):
+    """Shard-local half of the shuffle: bucket ``edges`` by destination
+    partition (owner = K2 mod P) into ``[n_parts, cap]`` send buffers and
+    run one ``all_to_all`` over the (flattened) partition axes.
+
+    Returns ``(recv Edges [n_parts*cap] flat, sent, drop)`` where ``sent``
+    counts this shard's valid edges that crossed the wire and ``drop``
+    counts valid edges beyond ``cap`` for some destination (the caller
+    either sizes ``cap`` so drops are impossible — the delta path — or
+    regrows and retries — the converge loop).
+    """
+    dest = partition_of(edges.k2, n_parts)
+    dest = jnp.where(edges.valid, dest, n_parts)
+    # stable sort by dest (via the backend dispatcher), then rank within
+    # dest; stability keeps same-(k2,mk) edges in emission order, which
+    # last-writer-wins merging downstream depends on
+    sorted_dest = ops.sort_pairs(dest, None, num_keys=1, backend=bk)
+    sdest = sorted_dest.k2
+    order = sorted_dest.perm
+    rank = jnp.arange(sdest.shape[0]) - jnp.searchsorted(
+        sdest, sdest, side="left")
+    ok = (sdest < n_parts) & (rank < cap)
+    drop = jnp.sum((rank >= cap) & (sdest < n_parts))
+
+    g = lambda a: jnp.take(a, order, axis=0)
+    sk2, smk = g(edges.k2), g(edges.mk)
+    sval, ssgn = g(edges.valid), g(edges.sign)
+    okv = ok & sval
+    sent = jnp.sum(okv)
+    send_k2 = jnp.full((n_parts, cap), INVALID_KEY, jnp.int32).at[
+        sdest, rank].set(jnp.where(okv, sk2, INVALID_KEY), mode="drop")
+    send_mk = jnp.full((n_parts, cap), INVALID_KEY, jnp.int32).at[
+        sdest, rank].set(jnp.where(okv, smk, INVALID_KEY), mode="drop")
+    send_valid = jnp.zeros((n_parts, cap), jnp.bool_).at[
+        sdest, rank].set(okv, mode="drop")
+    send_sign = jnp.zeros((n_parts, cap), jnp.int8).at[
+        sdest, rank].set(jnp.where(okv, ssgn, 0), mode="drop")
+    send_v2 = {}
+    for name, leaf in edges.v2.items():
+        sl = g(leaf)
+        buf = jnp.zeros((n_parts, cap) + sl.shape[1:], sl.dtype)
+        m = okv.reshape((-1,) + (1,) * (sl.ndim - 1))
+        send_v2[name] = buf.at[sdest, rank].set(
+            jnp.where(m, sl, 0), mode="drop")
+
+    # one all_to_all over the partition axis (flattened across pods)
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axes,
+                            split_axis=0, concat_axis=0, tiled=False)
+    flat = lambda a: a2a(a).reshape((-1,) + a.shape[2:])
+    recv = Edges(flat(send_k2), flat(send_mk),
+                 {n: flat(v) for n, v in send_v2.items()},
+                 flat(send_valid), flat(send_sign))
+    return recv, sent, drop
+
+
+# ---------------------------------------------------------------------------
 # The distributed iteration (one prime Map -> shuffle -> prime Reduce)
 # ---------------------------------------------------------------------------
 
 def make_distributed_step(spec: IterSpec, mesh: Mesh, axis: str,
                           shuffle_cap: int, *, hierarchical: bool = False,
                           pod_axis: Optional[str] = None,
-                          backend: Optional[str] = None):
+                          backend: Optional[str] = None,
+                          preserve: bool = False):
     """Build the jitted SPMD iteration over ``axis`` (+ optional pod axis).
 
     shuffle_cap: per (src, dst) shard edge capacity for the all_to_all.
     ``backend`` selects the shard-local shuffle/reduce implementation
     (resolved here, outside the jit, so rebuilding the step retraces).
+    ``preserve=True`` additionally returns each shard's received edges
+    sorted by (K2, MK) — exactly that shard's MRBG slice for the iteration
+    (what seeds the per-shard MRBG-Stores of fine-grain refresh).
     """
     bk = ops.resolve_backend(backend)
     n_parts = mesh.shape[axis] * (mesh.shape[pod_axis] if pod_axis else 1)
@@ -131,112 +216,154 @@ def make_distributed_step(spec: IterSpec, mesh: Mesh, axis: str,
         edges = spec.map_fn(KV(struct_keys, struct_vals, struct_valid),
                             dv, sign)
 
-        # shuffle: bucket by destination partition
-        dest = partition_of(edges.k2, n_parts)
-        dest = jnp.where(edges.valid, dest, n_parts)
-        # stable sort by dest (via the backend dispatcher), then rank
-        # within dest
-        sorted_dest = ops.sort_pairs(dest, None, num_keys=1, backend=bk)
-        sdest = sorted_dest.k2
-        order = sorted_dest.perm
-        rank = jnp.arange(sdest.shape[0]) - jnp.searchsorted(
-            sdest, sdest, side="left")
-        send_k2 = jnp.full((n_parts, shuffle_cap), INVALID_KEY, jnp.int32)
-        send_mk = jnp.full((n_parts, shuffle_cap), INVALID_KEY, jnp.int32)
-        send_valid = jnp.zeros((n_parts, shuffle_cap), jnp.bool_)
-        ok = (sdest < n_parts) & (rank < shuffle_cap)
-        src_idx = order
-        drop = jnp.sum((rank >= shuffle_cap) & (sdest < n_parts))
-
-        def scat(buf, vals):
-            return buf.at[jnp.where(ok, sdest, n_parts - 1),
-                          jnp.where(ok, rank, 0)].set(
-                jnp.where(_bshape(ok, vals), vals, buf.dtype.type(0)),
-                mode="drop")
-
-        g = lambda a: jnp.take(a, src_idx, axis=0)
-        sk2 = g(edges.k2)
-        smk = g(edges.mk)
-        sval = g(edges.valid)
-        send_k2 = send_k2.at[sdest, rank].set(
-            jnp.where(ok & sval, sk2, INVALID_KEY), mode="drop")
-        send_mk = send_mk.at[sdest, rank].set(
-            jnp.where(ok & sval, smk, INVALID_KEY), mode="drop")
-        send_valid = send_valid.at[sdest, rank].set(ok & sval, mode="drop")
-        send_v2 = {}
-        for name, leaf in edges.v2.items():
-            sl = g(leaf)
-            buf = jnp.zeros((n_parts, shuffle_cap) + sl.shape[1:], sl.dtype)
-            m = (ok & sval).reshape((-1,) + (1,) * (sl.ndim - 1))
-            send_v2[name] = buf.at[sdest, rank].set(
-                jnp.where(m, sl, 0), mode="drop")
-
-        # the exchange: one all_to_all over the partition axis (flattened
-        # across pods), or hierarchical intra-pod -> cross-pod
-        a2a = functools.partial(jax.lax.all_to_all, axis_name=axes,
-                                split_axis=0, concat_axis=0, tiled=False)
-        recv_k2 = a2a(send_k2)
-        recv_mk = a2a(send_mk)
-        recv_valid = a2a(send_valid)
-        recv_v2 = {n: a2a(v) for n, v in send_v2.items()}
+        recv, sent, drop = _exchange(edges, n_parts, shuffle_cap, axes, bk)
+        # sort by (K2, MK) before reducing: per-key accumulation order then
+        # matches the single-device shuffle exactly (bit-for-bit state), and
+        # the sorted buffer doubles as the shard's preserved MRBG slice
+        recv = sort_edges(recv, num_keys=2, backend=bk)
 
         # prime Reduce over the local dense key range (local = k2 // P)
-        rk2 = recv_k2.reshape(-1)
-        rvalid = recv_valid.reshape(-1)
-        local_ids = rk2 // n_parts
-        rv2 = jax.tree.map(
-            lambda a: a.reshape((-1,) + a.shape[2:]), recv_v2)
+        local_ids = recv.k2 // n_parts
         acc, counts = segment_reduce(spec.reducer,
-                                     jnp.where(rvalid, local_ids, rows),
-                                     rv2, rvalid, rows, backend=bk)
+                                     jnp.where(recv.valid, local_ids, rows),
+                                     recv.v2, recv.valid, rows, backend=bk)
         my = jax.lax.axis_index(axes[-1])
         if pod_axis:
             my = my + jax.lax.axis_index(pod_axis) * mesh.shape[axis]
         keys = jnp.arange(rows, dtype=jnp.int32) * n_parts + my
         new_vals = finalize_reduce(spec.reducer, keys, acc, counts)
         # zero backward transfer: output stays on this shard (Fig. 6)
-        return (jax.tree.map(lambda a: a[None], new_vals),
-                counts[None], drop[None])
+        lead = lambda a: a[None]
+        outs = (jax.tree.map(lead, new_vals),
+                counts[None], drop[None], sent[None])
+        if preserve:
+            outs += (recv.k2[None], recv.mk[None],
+                     jax.tree.map(lead, recv.v2), recv.valid[None])
+        return outs
 
-    pspec_struct = P(axes)
-    pspec_state = P(axes)
+    pspec = P(axes)
+    n_out = 8 if preserve else 4
     shmap = shard_map(
         local_iter, mesh=mesh,
-        in_specs=(pspec_struct, pspec_struct, pspec_struct, pspec_state),
-        out_specs=(pspec_state, pspec_state, P(axes)),
+        in_specs=(pspec, pspec, pspec, pspec),
+        out_specs=(pspec,) * n_out,
         check_rep=False)
-    return jax.jit(shmap)
+
+    def step(*args):
+        jitcache.count_trace("distributed.step")
+        return shmap(*args)
+
+    return jax.jit(step)
 
 
-def _bshape(mask, vals):
-    return mask.reshape((-1,) + (1,) * (vals.ndim - 1))
+def _edge_capacity(spec: IterSpec, skeys, svals, state, rows: int) -> int:
+    """Static per-shard edge capacity of the prime Map, via ``eval_shape``
+    (no device work).  This bounds how far the shuffle capacity can ever
+    usefully regrow: one shard holds at most this many valid edges total."""
+    cap = skeys.shape[1]
+
+    def sd(a, lead):
+        a = np.asarray(a)
+        return jax.ShapeDtypeStruct((lead,) + a.shape[2:], a.dtype)
+
+    kv = KV(jax.ShapeDtypeStruct((cap,), jnp.int32),
+            jax.tree.map(lambda a: sd(a, cap), svals),
+            jax.ShapeDtypeStruct((cap,), jnp.bool_))
+    lead = rows if spec.replicate_state else cap
+    dv = jax.tree.map(lambda a: sd(a, lead), state)
+    sign = jax.ShapeDtypeStruct((cap,), jnp.int8)
+    edges = jax.eval_shape(spec.map_fn, kv, dv, sign)
+    return int(edges.k2.shape[0])
+
+
+def _preserved_to_host(pk2, pmk, pv2, pvalid):
+    """Split preserved recv edges [P, R, ...] into per-shard host dicts."""
+    k2, mk = np.asarray(pk2), np.asarray(pmk)
+    valid = np.asarray(pvalid)
+    v2 = jax.tree.map(np.asarray, pv2)
+    out = []
+    for p in range(k2.shape[0]):
+        idx = np.nonzero(valid[p])[0]
+        out.append({"k2": k2[p][idx], "mk": mk[p][idx],
+                    "v2": jax.tree.map(lambda a: a[p][idx], v2)})
+    return out
 
 
 def run_distributed(spec: IterSpec, mesh: Mesh, struct_parts, state_parts,
                     *, axis: str = "data", pod_axis: Optional[str] = None,
                     shuffle_cap: int = 4096, max_iters: int = 50,
-                    tol: float = 1e-6, backend: Optional[str] = None):
+                    tol: float = 1e-6, backend: Optional[str] = None,
+                    auto_grow: bool = True, preserve_last: bool = False,
+                    step_cache: Optional[dict] = None):
     """Drive the distributed prime loop to convergence.
 
+    Overflowing the per-(src, dst) shuffle capacity regrows the capacity up
+    the power-of-two ladder and redoes the iteration (``auto_grow=True``),
+    bounded by the static per-shard edge capacity; with ``auto_grow=False``
+    (or at the bound) it raises instead.  Either way ``state_parts`` is
+    never mutated and no partially-updated state escapes: the failed
+    iteration's output is discarded, so callers can keep their pre-call
+    state on error.
+
+    ``preserve_last=True`` keeps the final iteration's per-shard received
+    edges in ``history["last_edges"]`` (one host dict per shard, sorted by
+    (K2, MK)) — by construction ``reduce(last_edges[p]) == state[p]``,
+    which seeds the per-shard MRBG-Stores of fine-grain refresh.
+
+    ``step_cache`` (a caller-owned dict) reuses jitted steps across calls,
+    keeping repeated warm re-converges retrace-free.
+
     Engine-internal: user code drives this through ``repro.api.Session``
-    with ``RunConfig(mesh=...)``.
+    with ``RunConfig(mesh=MeshConfig(...))``.
     """
-    step = make_distributed_step(spec, mesh, axis, shuffle_cap,
-                                 pod_axis=pod_axis, backend=backend)
+    import time as _time
+
     skeys, svals, svalid = struct_parts
     state = state_parts
     diff_fn = spec.difference
-    history = {"iters": 0, "max_change": [], "dropped": 0}
+    rows = next(iter(state.values())).shape[1]
+    cap_ceiling = next_bucket(
+        _edge_capacity(spec, skeys, svals, state, rows), 1)
+    cap = int(shuffle_cap)
+    cache = step_cache if step_cache is not None else {}
+
+    def get_step(c):
+        key = ("step", c, bool(preserve_last), axis, pod_axis)
+        if key not in cache:
+            cache[key] = make_distributed_step(
+                spec, mesh, axis, c, pod_axis=pod_axis, backend=backend,
+                preserve=preserve_last)
+        return cache[key]
+
+    history = {"iters": 0, "max_change": [], "dropped": 0, "sent": 0,
+               "exchange_seconds": [], "shuffle_cap": cap, "regrows": 0,
+               "last_edges": None}
+    jskeys = jnp.asarray(skeys)
+    jsvals = jax.tree.map(jnp.asarray, svals)
+    jsvalid = jnp.asarray(svalid)
+    last_pres = None
     for it in range(max_iters):
-        new_vals, counts, drop = step(jnp.asarray(skeys),
-                                      jax.tree.map(jnp.asarray, svals),
-                                      jnp.asarray(svalid),
-                                      jax.tree.map(jnp.asarray, state))
-        nd = int(jnp.sum(drop))
-        if nd:
-            raise RuntimeError(
-                f"shuffle capacity overflow: {nd} edges dropped; raise "
-                f"shuffle_cap")
+        while True:
+            t0 = _time.perf_counter()
+            outs = get_step(cap)(jskeys, jsvals, jsvalid,
+                                 jax.tree.map(jnp.asarray, state))
+            new_vals, counts, drop, sent = outs[:4]
+            nd = int(jnp.sum(drop))
+            if nd == 0:
+                history["exchange_seconds"].append(
+                    _time.perf_counter() - t0)
+                break
+            history["dropped"] += nd
+            if not auto_grow or cap >= cap_ceiling:
+                raise RuntimeError(
+                    f"shuffle capacity overflow: {nd} edges dropped; raise "
+                    f"shuffle_cap")
+            cap = min(next_bucket(cap + 1, 1), cap_ceiling)
+            history["regrows"] += 1
+            history["shuffle_cap"] = cap
+        history["sent"] += int(jnp.sum(sent))
+        if preserve_last:
+            last_pres = outs[4:8]
         flat_new = jax.tree.map(
             lambda a: a.reshape((-1,) + a.shape[2:]), new_vals)
         flat_old = jax.tree.map(
@@ -247,4 +374,180 @@ def run_distributed(spec: IterSpec, mesh: Mesh, struct_parts, state_parts,
         history["max_change"].append(change)
         if change < tol:
             break
+    if last_pres is not None:
+        history["last_edges"] = _preserved_to_host(*last_pres)
     return state, history
+
+
+# ---------------------------------------------------------------------------
+# Fine-grain refresh, phase 1: the delta exchange (device)
+# ---------------------------------------------------------------------------
+
+def partition_delta(delta, n_parts: int, cap: int, project=None):
+    """Host-side partitioning of delta rows by ``hash(project(SK))``
+    (Eq. 2; ``project=None`` — the one-step flavor — partitions by the
+    record key itself).
+
+    Submission order is preserved within each shard, so an update's '-'
+    row stays ahead of its '+' row and last-writer-wins merging resolves
+    it correctly.  This relies on the two rows landing on the *same*
+    shard, i.e. updates keep ``project(SK)`` stable — true of every
+    engine app, where the record key is the Map-instance identity.
+
+    Returns (keys, values, valid, sign), each ``[n_parts, cap, ...]``.
+    """
+    keys = np.asarray(delta.keys)
+    valid = np.asarray(delta.valid)
+    sign = np.asarray(delta.sign)
+    if project is not None:
+        dks = np.asarray(jax.jit(project)(jnp.asarray(keys)))
+    else:
+        dks = keys
+    pid = (dks.astype(np.uint32) % np.uint32(n_parts)).astype(np.int32)
+    vleaves, vdef = jax.tree.flatten(
+        jax.tree.map(np.asarray, delta.values))
+    out_keys = np.full((n_parts, cap), _IK, np.int32)
+    out_valid = np.zeros((n_parts, cap), bool)
+    out_sign = np.zeros((n_parts, cap), np.int8)
+    out_leaves = [np.zeros((n_parts, cap) + a.shape[1:], a.dtype)
+                  for a in vleaves]
+    for p in range(n_parts):
+        sel = np.nonzero(valid & (pid == p))[0]
+        if sel.size > cap:
+            raise ValueError(
+                f"delta partition {p} overflow ({sel.size} > {cap})")
+        out_keys[p, :sel.size] = keys[sel]
+        out_valid[p, :sel.size] = True
+        out_sign[p, :sel.size] = sign[sel]
+        for buf, a in zip(out_leaves, vleaves):
+            buf[p, :sel.size] = a[sel]
+    return (out_keys, jax.tree.unflatten(vdef, out_leaves),
+            out_valid, out_sign)
+
+
+def make_delta_exchange_step(spec, mesh: Mesh, axis: str, *,
+                             pod_axis: Optional[str] = None,
+                             backend: Optional[str] = None):
+    """Build the jitted phase-1 step of fine-grain distributed refresh.
+
+    Each shard re-Maps its partition of the delta rows (gathering its
+    *local* state slice when ``spec`` is iterative — co-located by Eq. 1,
+    so the gather never leaves the shard) and one ``all_to_all`` routes
+    the emitted delta edges to their owner shards.  The send capacity is
+    the full per-shard edge capacity, so the delta path can never drop
+    an edge — no regrow loop, one executable per delta-row bucket.
+
+    Outputs per shard (sorted by (K2, MK), keys global):
+    ``(k2, mk, v2, valid, sign, sent, drop)``.
+    """
+    bk = ops.resolve_backend(backend)
+    n_parts = mesh.shape[axis] * (mesh.shape[pod_axis] if pod_axis else 1)
+    axes = (pod_axis, axis) if pod_axis else (axis,)
+    iterative = hasattr(spec, "project")
+
+    def body(dkeys, dvals, dvalid, dsign, state_vals=None):
+        dkeys = dkeys[0]
+        dvals = jax.tree.map(lambda a: a[0], dvals)
+        dvalid, dsign = dvalid[0], dsign[0]
+        kv = KV(dkeys, dvals, dvalid)
+        if iterative:
+            state_local = jax.tree.map(lambda a: a[0], state_vals)
+            if spec.replicate_state:
+                dv = state_local
+            else:
+                dks = spec.project(dkeys)
+                dv = jax.tree.map(
+                    lambda a: jnp.take(a, dks // n_parts, axis=0),
+                    state_local)
+            edges = spec.map_fn(kv, dv, dsign)
+        else:
+            edges = spec.map_fn(kv, dsign)
+        recv, sent, drop = _exchange(edges, n_parts, edges.capacity,
+                                     axes, bk)
+        pres = sort_edges(recv, num_keys=2, backend=bk)
+        lead = lambda a: a[None]
+        return (pres.k2[None], pres.mk[None], jax.tree.map(lead, pres.v2),
+                pres.valid[None], pres.sign[None], sent[None], drop[None])
+
+    pspec = P(axes)
+    n_in = 5 if iterative else 4
+    shmap = shard_map(body, mesh=mesh, in_specs=(pspec,) * n_in,
+                      out_specs=(pspec,) * 7, check_rep=False)
+
+    def step(*args):
+        jitcache.count_trace("distributed.delta_exchange")
+        return shmap(*args)
+
+    return jax.jit(step)
+
+
+def delta_exchange_to_host(outs):
+    """Pull a delta-exchange step's outputs to per-shard host dicts.
+
+    Returns ``(shards, sent, dropped)`` where each shard dict carries the
+    valid received delta edges (global keys, (K2, MK)-sorted, sign kept).
+    """
+    k2, mk, v2, valid, sign, sent, drop = outs
+    k2, mk = np.asarray(k2), np.asarray(mk)
+    valid, sign = np.asarray(valid), np.asarray(sign)
+    v2 = jax.tree.map(np.asarray, v2)
+    shards = []
+    for p in range(k2.shape[0]):
+        idx = np.nonzero(valid[p])[0]
+        shards.append({"k2": k2[p][idx], "mk": mk[p][idx],
+                       "v2": jax.tree.map(lambda a: a[p][idx], v2),
+                       "sign": sign[p][idx]})
+    return shards, int(np.sum(sent)), int(np.sum(drop))
+
+
+# ---------------------------------------------------------------------------
+# Fine-grain refresh, phase 2: the per-shard MRBG merge (host + jit kernels)
+# ---------------------------------------------------------------------------
+
+def merge_shard_delta(reducer: Reducer, store: MRBGStore, shard: int,
+                      n_parts: int, dk2, dmk, dv2, dsign, *,
+                      backend: Optional[str] = None):
+    """Merge one shard's received delta edges into its local MRBG slice.
+
+    ``dk2`` arrives in *global* keys ((K2, MK)-sorted); the store is keyed
+    by local ids (K2 // P — Eq. 1's dense per-shard layout), while the
+    merge itself runs in global keys so ``finalize_reduce`` sees true K2s.
+    Reuses the exact ``_combine_edges``/``_merge_reduce`` kernels of the
+    single-device incremental path — preserved rows first, stable sort,
+    last-writer-wins, tombstones — which is what makes distributed refresh
+    bit-for-bit comparable with the single-device result.
+
+    Returns (affected global keys, values dict, counts), each sized to the
+    affected set, for the caller to patch the dense view and state slice.
+    """
+    bk = ops.resolve_backend(backend)
+    dk2 = np.asarray(dk2, np.int32)
+    affected = np.unique(dk2)
+    if affected.size == 0:
+        return affected.astype(np.int32), {}, np.zeros(0, np.int32)
+    local = ((affected.astype(np.int64) - shard) // n_parts).astype(np.int32)
+    dv2 = _v2_dict(dv2)
+    pk2l, pmk, pv2, _plen = store.query(local)
+    if pv2 is None:
+        pv2 = {n: np.zeros((0,) + a.shape[1:], a.dtype)
+               for n, a in dv2.items()}
+    pk2g = (pk2l.astype(np.int64) * n_parts + shard).astype(np.int32)
+
+    key_cap = next_bucket(affected.size, 64)
+    combined = _combine_edges(pk2g, pmk, pv2, dk2, np.asarray(dmk, np.int32),
+                              dv2, np.asarray(dsign, np.int8))
+    keys_pad = np.full(key_cap, _IK, np.int32)
+    keys_pad[:affected.size] = affected.astype(np.int32)
+    merged, values, counts = _merge_reduce(reducer, key_cap, bk,
+                                           combined, jnp.asarray(keys_pad))
+
+    mh = edges_to_host(merged)
+    mlocal = ((mh["k2"].astype(np.int64) - shard) // n_parts).astype(np.int32)
+    store.append(mlocal, mh["mk"], _v2_dict(mh["v2"]))
+    counts_h = np.asarray(counts)[:affected.size]
+    gone = affected[counts_h == 0]
+    store.mark_deleted(
+        ((gone.astype(np.int64) - shard) // n_parts).astype(np.int32))
+    vals_h = {n: np.asarray(a)[:affected.size]
+              for n, a in _v2_dict(values).items()}
+    return affected.astype(np.int32), vals_h, counts_h

@@ -48,6 +48,35 @@ from repro.kernels import jitcache, ops
 _IK = np.int32(2**31 - 1)
 
 
+def build_reverse_index(project, struct_keys: np.ndarray,
+                        struct_valid: np.ndarray, num_state: int):
+    """CSR reverse image of Project: DK -> structure record ids.
+
+    Shared by the single-device refresh job and the distributed fine-grain
+    driver (which selects iteration >= 2's re-Mapped records from it).
+    Returns ``(indptr [num_state+1], record_ids, dks_host)``.
+    """
+    dks = np.asarray(jax.jit(project)(jnp.asarray(struct_keys)))
+    dks = np.where(struct_valid, dks, num_state)
+    order = np.argsort(dks, kind="stable")
+    sorted_dks = dks[order]
+    counts = np.bincount(sorted_dks, minlength=num_state + 1)
+    indptr = np.concatenate(
+        [[0], np.cumsum(counts[:num_state])]).astype(np.int64)
+    ids = order[:indptr[-1]].astype(np.int32)
+    return indptr, ids, dks.astype(np.int32)
+
+
+def records_of_dks(indptr: np.ndarray, ids: np.ndarray,
+                   dks: np.ndarray) -> np.ndarray:
+    """The unique structure records whose Map instances read any of
+    ``dks`` (the delta state data's reverse dependency set)."""
+    parts = [ids[indptr[d]:indptr[d + 1]] for d in dks]
+    if not parts:
+        return np.zeros(0, np.int32)
+    return np.unique(np.concatenate(parts)).astype(np.int32)
+
+
 @dataclass
 class IterationLog:
     iteration: int
@@ -97,25 +126,14 @@ class IncrIterJob:
     # ------------------------------------------------------------------
     def _rebuild_reverse_index(self) -> None:
         """CSR: DK -> structure record ids (Project's reverse image)."""
-        dks = np.asarray(
-            jax.jit(self.spec.project)(jnp.asarray(self.struct_keys)))
-        dks = np.where(self.struct_valid, dks, self.spec.num_state)
-        order = np.argsort(dks, kind="stable")
-        sorted_dks = dks[order]
-        counts = np.bincount(sorted_dks, minlength=self.spec.num_state + 1)
-        self.rev_indptr = np.concatenate(
-            [[0], np.cumsum(counts[:self.spec.num_state])]).astype(np.int64)
-        self.rev_ids = order[:self.rev_indptr[-1]].astype(np.int32)
-        self.dks_host = dks.astype(np.int32)
+        self.rev_indptr, self.rev_ids, self.dks_host = build_reverse_index(
+            self.spec.project, self.struct_keys, self.struct_valid,
+            self.spec.num_state)
 
     def _records_of_dks(self, dks: np.ndarray) -> np.ndarray:
         if self.spec.replicate_state:
             return np.nonzero(self.struct_valid)[0].astype(np.int32)
-        parts = [self.rev_ids[self.rev_indptr[d]:self.rev_indptr[d + 1]]
-                 for d in dks]
-        if not parts:
-            return np.zeros(0, np.int32)
-        return np.unique(np.concatenate(parts)).astype(np.int32)
+        return records_of_dks(self.rev_indptr, self.rev_ids, dks)
 
     def _struct_kv(self) -> KV:
         return KV(jnp.asarray(self.struct_keys),

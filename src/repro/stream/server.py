@@ -119,8 +119,7 @@ class MultiSessionServer:
         # compact fattest-obsolete first until the total fits
         order = sorted(
             self.tenants.values(),
-            key=lambda t: (t.session.store.obsolete_bytes()
-                           if t.session.store else 0),
+            key=lambda t: t.session.store_obsolete_bytes(),
             reverse=True)
         for tenant in order:
             if total <= self.store_budget_bytes:

@@ -290,11 +290,10 @@ class StreamSession:
                              self._mvalid[rows].copy())
                     apply_delta_host(self._mkeys, self._mvalues,
                                      self._mvalid, res.delta)
-                    st = self.session.store
                     decision = self.scheduler.decide(
                         res.n_out, state_rows=int(self._mvalid.sum()),
-                        store_file_bytes=st.file_bytes() if st else 0,
-                        store_live_bytes=st.live_bytes() if st else 0)
+                        store_file_bytes=self.session.store_bytes(),
+                        store_live_bytes=self.session.store_live_bytes())
                     gen0 = jitcache.generation()
                     try:
                         if decision.action == "update":

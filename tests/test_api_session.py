@@ -189,8 +189,10 @@ class TestIncrementalIterative:
 # ---------------------------------------------------------------------------
 
 def test_distributed_via_config_parity():
+    # deliberately uses the pre-MeshConfig flat spelling: the deprecated
+    # aliases must keep working (one release) and warn
     script = """
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax, jax.numpy as jnp, warnings
 from jax.sharding import Mesh
 from repro.api import Session, RunConfig, make_delta
 from repro.apps import pagerank as pr
@@ -199,8 +201,12 @@ S, F = 256, 5
 nbrs = pr.random_graph(S, F, seed=11, p_edge=0.5)
 spec, struct = pr.make_job(nbrs)
 mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
-sess = Session(spec, RunConfig(mesh=mesh, shuffle_cap=512,
-                               max_iters=60, tol=1e-7))
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    cfg = RunConfig(mesh=mesh, shuffle_cap=512, max_iters=60, tol=1e-7)
+assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+assert cfg.mesh.shuffle_cap == 512 and cfg.shuffle_cap is None
+sess = Session(spec, cfg)
 rep = sess.run(struct)
 assert rep.mode == "distributed", rep.mode
 
@@ -242,19 +248,21 @@ print("OK")
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
 
 
-def test_distributed_rejects_onestep_and_replicated():
+def test_distributed_accepts_onestep_rejects_replicated():
+    from repro.api import MeshConfig
     from repro.core.engine import JobSpec
     from repro.core.kvstore import sum_reducer
 
     class FakeMesh:                     # stands in for a Mesh; never used
         shape = {"data": 2}
 
-    with pytest.raises(ValueError, match="IterSpec"):
-        Session(JobSpec(lambda kv, s: None, sum_reducer(), 4, "j"),
-                RunConfig(mesh=FakeMesh()))
+    # JobSpec + mesh drives the per-shard one-step engine
+    sess = Session(JobSpec(lambda kv, s: None, sum_reducer(), 4, "j"),
+                   RunConfig(mesh=MeshConfig(FakeMesh())))
+    assert sess._driver.kind == "distributed-onestep"
     spec = kmeans.make_spec(2, 2, np.zeros((2, 2), np.float32))
     with pytest.raises(ValueError, match="replicate_state"):
-        Session(spec, RunConfig(mesh=FakeMesh()))
+        Session(spec, RunConfig(mesh=MeshConfig(FakeMesh())))
 
 
 # ---------------------------------------------------------------------------

@@ -68,14 +68,32 @@ print("OK")
 
 
 def test_overflow_detection():
+    """With auto_grow off, an undersized shuffle_cap must fail loudly."""
     _run(COMMON + """
 mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
 try:
     run_distributed(spec, mesh, (skeys, svals, svalid), state0,
-                    axis="data", shuffle_cap=2, max_iters=2, tol=1e-7)
+                    axis="data", shuffle_cap=2, max_iters=2, tol=1e-7,
+                    auto_grow=False)
     raise SystemExit("expected overflow error")
 except RuntimeError as e:
     assert "overflow" in str(e)
+print("OK")
+""")
+
+
+def test_overflow_auto_regrow():
+    """Default auto_grow walks the cap up the bucket ladder instead of
+    failing, and still matches the single-device fixed point."""
+    _run(COMMON + """
+mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+out, hist = run_distributed(spec, mesh, (skeys, svals, svalid), state0,
+                            axis="data", shuffle_cap=2, max_iters=60,
+                            tol=1e-7)
+assert hist["regrows"] >= 1, hist["regrows"]
+assert hist["shuffle_cap"] > 2
+got = unpartition_state({k: np.asarray(v) for k, v in out.items()}, S)["r"]
+assert np.abs(got - ref).max() < 1e-5, np.abs(got - ref).max()
 print("OK")
 """)
 
