@@ -79,6 +79,11 @@ def run_ratio(backend: str, mesh: Mesh, nbrs: np.ndarray, ratio: float,
     sessions = {
         "fine": Session(pr.make_job(nbrs)[0], RunConfig(
             mesh=MeshConfig(mesh, shuffle_cap=shuffle_cap), **kw)),
+        # identical fine path with the phase-2 shard merges forced
+        # sequential: the before/after of the threaded host loop
+        "fine_seq": Session(pr.make_job(nbrs)[0], RunConfig(
+            mesh=MeshConfig(mesh, shuffle_cap=shuffle_cap,
+                            merge_workers=1), **kw)),
         "warm": Session(pr.make_job(nbrs)[0], RunConfig(
             mesh=MeshConfig(mesh, shuffle_cap=shuffle_cap,
                             refresh="warm"), **kw)),
@@ -91,34 +96,48 @@ def run_ratio(backend: str, mesh: Mesh, nbrs: np.ndarray, ratio: float,
         sess.run(struct)
         converge_s[name] = time.perf_counter() - t0
 
-    # identical delta stream for both sessions (+1 warm-up epoch so the
-    # percentiles measure steady-state, not first-bucket compiles)
+    # identical delta stream for all sessions (+1 warm-up epoch so the
+    # percentiles measure steady-state, not first-bucket compiles).
+    # Sessions are interleaved per delta with a rotating order: the XLA
+    # executable cache is process-global, so whichever session goes
+    # first pays any fresh bucket compile that the others then reuse —
+    # rotation spreads that cost evenly instead of biasing the A/B.
     rng = np.random.default_rng(17)
     mirror = nbrs.copy()
     deltas = [_graph_delta(mirror, rng, n_rows) for _ in range(epochs + 1)]
-    for name, sess in sessions.items():
-        secs, modes, edges, bytes_moved = [], {}, 0, 0
-        for i, d in enumerate(deltas):
+    names = list(sessions)
+    stats = {n: {"secs": [], "modes": {}, "edges": 0, "bytes": 0}
+             for n in names}
+    for i, d in enumerate(deltas):
+        r = i % len(names)
+        for name in names[r:] + names[:r]:
             t0 = time.perf_counter()
-            rep = sess.update(d)
+            rep = sessions[name].update(d)
             dt = time.perf_counter() - t0
             if i == 0:
                 continue               # warm-up epoch
-            secs.append(dt)
-            modes[rep.mode] = modes.get(rep.mode, 0) + 1
-            edges += rep.shuffle.edges_exchanged
-            bytes_moved += rep.shuffle.bytes_moved
-        out[name] = {**_pcts(secs), "modes": modes,
+            st = stats[name]
+            st["secs"].append(dt)
+            st["modes"][rep.mode] = st["modes"].get(rep.mode, 0) + 1
+            st["edges"] += rep.shuffle.edges_exchanged
+            st["bytes"] += rep.shuffle.bytes_moved
+    for name in names:
+        st = stats[name]
+        out[name] = {**_pcts(st["secs"]), "modes": st["modes"],
                      "initial_converge_ms": converge_s[name] * 1e3,
-                     "edges_exchanged": edges, "bytes_moved": bytes_moved}
+                     "edges_exchanged": st["edges"],
+                     "bytes_moved": st["bytes"]}
         emit(f"dist.{backend}.r{ratio:g}.{name}.p50_ms",
              out[name]["p50_ms"],
-             f"p95={out[name]['p95_ms']:.1f}ms,modes={modes}")
+             f"p95={out[name]['p95_ms']:.1f}ms,modes={st['modes']}")
     f, w = out["fine"], out["warm"]
     out["speedup_p50"] = w["p50_ms"] / max(f["p50_ms"], 1e-9)
     out["bytes_ratio"] = f["bytes_moved"] / max(w["bytes_moved"], 1)
+    out["merge_thread_speedup_p50"] = (
+        out["fine_seq"]["p50_ms"] / max(f["p50_ms"], 1e-9))
     emit(f"dist.{backend}.r{ratio:g}.speedup_p50", out["speedup_p50"],
-         f"bytes fine/warm={out['bytes_ratio']:.3f}")
+         f"bytes fine/warm={out['bytes_ratio']:.3f},"
+         f"merge_threads={out['merge_thread_speedup_p50']:.2f}x")
     return out
 
 

@@ -103,6 +103,66 @@ def _bench_ops(backend: str, results: dict) -> None:
     results["segment_reduce_us"] = dt * 1e6
 
 
+def _sweep_ops(backend: str, sizes, *, repeat: int = 2) -> list:
+    """Size sweep of the dispatcher hot paths (2^10..2^20 rows by default).
+
+    Records, per size: the shuffle sort, the segment reduce, and (pallas)
+    the fused vs composed ``shuffle_reduce``.  The point of the sweep is
+    the *shape* of the curves — before the multi-tile sort, pallas fell
+    off a cliff past one VMEM tile (pad-to-pow2-of-total); now the cost
+    should scale as n log² n with no discontinuity at the old tile limit.
+    """
+    from repro.kernels import ops
+
+    class _Sum:
+        kind = "sum"
+
+    rng = np.random.default_rng(0)
+    key_cap, d = 1024, 8
+    rows = []
+    for n in sizes:
+        rec = {"n": n}
+        k2 = jnp.asarray(rng.integers(0, key_cap, n), jnp.int32)
+        mk = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+        vals = {"v": jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)}
+        valid = jnp.ones(n, bool)
+        sign = jnp.ones(n, jnp.int8)
+        keys = jnp.asarray(np.arange(key_cap, dtype=np.int32))
+
+        fn = lambda: ops.sort_pairs(k2, mk, vals,
+                                    backend=backend).k2.block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=repeat)
+        rec["sort_us"] = dt * 1e6
+
+        seg = jnp.asarray(np.sort(rng.integers(0, key_cap, n)), jnp.int32)
+        fn = lambda: ops.segment_reduce(
+            "sum", seg, vals, valid, key_cap,
+            backend=backend)[1].block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=repeat)
+        rec["segment_reduce_us"] = dt * 1e6
+
+        fn = lambda: ops.shuffle_reduce(
+            _Sum(), k2, mk, vals, valid, sign, keys,
+            backend=backend).counts.block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=repeat)
+        rec["shuffle_reduce_us"] = dt * 1e6
+        if backend == "pallas":
+            fn = lambda: ops.shuffle_reduce(
+                _Sum(), k2, mk, vals, valid, sign, keys, backend=backend,
+                fused=False).counts.block_until_ready()
+            fn()
+            _, dt = timed(fn, repeat=repeat)
+            rec["shuffle_reduce_unfused_us"] = dt * 1e6
+        emit(f"ops.sweep.{backend}.n{n}.sort_us", rec["sort_us"],
+             ",".join(f"{k}={v:.0f}" for k, v in rec.items()
+                      if k.endswith("_us") and k != "sort_us"))
+        rows.append(rec)
+    return rows
+
+
 def _bench_incremental_onestep(backend: str, results: dict) -> None:
     """End-to-end one-step refresh (wordcount, paper Section 3.3) through
     the repro.api Session façade."""
@@ -136,13 +196,16 @@ def _bench_incremental_onestep(backend: str, results: dict) -> None:
     results["refresh_us"] = dt * 1e6
 
 
-def run_backend_compare(backends, out_path: str = "BENCH_backend.json"):
+def run_backend_compare(backends, out_path: str = "BENCH_backend.json",
+                        sweep_sizes=None):
     import jax
     report = {"platform": jax.default_backend(), "backends": {}}
     for bk in backends:
         res: dict = {}
         _bench_ops(bk, res)
         _bench_incremental_onestep(bk, res)
+        if sweep_sizes:
+            res["sweep"] = _sweep_ops(bk, sweep_sizes)
         report["backends"][bk] = res
     if ("xla" in report["backends"] and "pallas" in report["backends"]):
         x = report["backends"]["xla"]["refresh_us"]
@@ -162,11 +225,21 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_backend.json")
     ap.add_argument("--micro", action="store_true",
                     help="also run the legacy kernel micro-benchmarks")
+    ap.add_argument("--sweep", action="store_true",
+                    help="size sweep 2^10..2^20 rows of the dispatcher "
+                         "hot paths (the tile-cliff witness)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: sweep 2^10..2^14 only")
     args = ap.parse_args()
     if args.micro:
         run()
     backends = ("xla", "pallas") if args.backend == "both" else (args.backend,)
-    run_backend_compare(backends, args.out)
+    sizes = None
+    if args.tiny:
+        sizes = [1 << p for p in range(10, 15)]
+    elif args.sweep:
+        sizes = [1 << p for p in range(10, 21)]
+    run_backend_compare(backends, args.out, sweep_sizes=sizes)
 
 
 if __name__ == "__main__":

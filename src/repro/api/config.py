@@ -58,6 +58,11 @@ class MeshConfig:
     #             pre-MeshConfig behavior; the Fig. 8 rerun-side baseline)
     refresh: str = "fine"
 
+    # host threads for the fine-grain phase-2 per-shard MRBG merges
+    # (disjoint stores, so they parallelize safely): 0 = auto
+    # (min(8, cpus, shards)), 1 = sequential, n = exactly n threads
+    merge_workers: int = 0
+
     def __post_init__(self):
         shape = getattr(self.mesh, "shape", None)
         if shape is None:
@@ -79,6 +84,8 @@ class MeshConfig:
         if self.refresh not in REFRESH_MODES:
             raise ValueError(f"refresh must be one of {REFRESH_MODES}, "
                              f"got {self.refresh!r}")
+        if self.merge_workers < 0:
+            raise ValueError("merge_workers must be >= 0 (0 = auto)")
 
     @property
     def n_parts(self) -> int:

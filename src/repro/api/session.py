@@ -657,7 +657,7 @@ class _Distributed:
         merges (host).  Returns emitted DKs, or None => fall back."""
         from repro.core.distributed import (
             delta_exchange_to_host, make_delta_exchange_step,
-            merge_shard_delta, partition_delta)
+            merge_shards_parallel, partition_delta)
         spec, cfg, n_parts = self.spec, self.cfg, self.n_parts
         t0 = time.perf_counter()
         for s in self.stores:
@@ -690,18 +690,16 @@ class _Distributed:
         sh.bytes_moved += sent * self._edge_bytes()
         sh.shuffle_cap = int(np.asarray(outs[0]).shape[1]) // n_parts
 
-        # phase 2: per-shard MRBG merges (disjoint global key sets)
+        # phase 2: per-shard MRBG merges (disjoint global key sets),
+        # threaded across shards; CPC/state updates apply in shard order
         diff_fn = spec.difference
         affected_total = 0
         max_change = 0.0
         affected_parts = []
-        for p, shard in enumerate(shards):
-            if shard["k2"].size == 0:
-                continue
-            aff, vals, _counts = merge_shard_delta(
-                spec.reducer, self.stores[p], p, n_parts,
-                shard["k2"], shard["mk"], shard["v2"], shard["sign"],
-                backend=cfg.backend)
+        merged = merge_shards_parallel(
+            spec.reducer, self.stores, n_parts, shards,
+            backend=cfg.backend, workers=self.mc.merge_workers)
+        for p, aff, vals, _counts in merged:
             if aff.size == 0:
                 continue
             affected_total += int(aff.size)
@@ -829,7 +827,7 @@ class _DistOneStep:
     def _refresh(self, delta: DeltaKV) -> None:
         from repro.core.distributed import (
             delta_exchange_to_host, make_delta_exchange_step,
-            merge_shard_delta, partition_delta)
+            merge_shards_parallel, partition_delta)
         spec, cfg, n_parts = self.spec, self.cfg, self.n_parts
         for s in self.stores:
             s.reset_stats()
@@ -856,13 +854,10 @@ class _DistOneStep:
         sh.shuffle_cap = int(np.asarray(outs[0]).shape[1]) // n_parts
 
         affected_total = 0
-        for p, shard in enumerate(shards):
-            if shard["k2"].size == 0:
-                continue
-            aff, vals, counts = merge_shard_delta(
-                spec.reducer, self.stores[p], p, n_parts,
-                shard["k2"], shard["mk"], shard["v2"], shard["sign"],
-                backend=cfg.backend)
+        merged = merge_shards_parallel(
+            spec.reducer, self.stores, n_parts, shards,
+            backend=cfg.backend, workers=self.mc.merge_workers)
+        for p, aff, vals, counts in merged:
             if aff.size == 0:
                 continue
             affected_total += int(aff.size)

@@ -41,6 +41,7 @@ into two phases so the MRBG-Store can stay host-side:
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -551,3 +552,37 @@ def merge_shard_delta(reducer: Reducer, store: MRBGStore, shard: int,
     vals_h = {n: np.asarray(a)[:affected.size]
               for n, a in _v2_dict(values).items()}
     return affected.astype(np.int32), vals_h, counts_h
+
+
+def merge_shards_parallel(reducer: Reducer, stores, n_parts: int, shards,
+                          *, backend: Optional[str] = None,
+                          workers: int = 0):
+    """Run :func:`merge_shard_delta` for every non-empty shard, threaded.
+
+    Each shard merges against its own :class:`MRBGStore` and a disjoint
+    global key set, so the host-side merges are embarrassingly parallel;
+    jit dispatch is thread-safe and the per-shard kernels share the
+    bucketed executable cache.  ``workers=0`` sizes the pool automatically
+    (``min(8, cpus, jobs)``); ``workers=1`` keeps the historical
+    sequential loop.  Returns ``[(p, affected, vals, counts), ...]`` in
+    shard order either way, so callers can apply CPC/state/view updates
+    deterministically.
+    """
+    jobs = [(p, sh) for p, sh in enumerate(shards) if sh["k2"].size]
+    if not jobs:
+        return []
+
+    def _one(job):
+        p, sh = job
+        aff, vals, counts = merge_shard_delta(
+            reducer, stores[p], p, n_parts, sh["k2"], sh["mk"], sh["v2"],
+            sh["sign"], backend=backend)
+        return p, aff, vals, counts
+
+    if workers == 0:
+        workers = min(8, os.cpu_count() or 1, len(jobs))
+    if workers <= 1 or len(jobs) == 1:
+        return [_one(j) for j in jobs]
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        return list(ex.map(_one, jobs))       # ex.map preserves order

@@ -30,7 +30,7 @@ import numpy as np
 from repro.core.engine import JobSpec, run_onestep
 from repro.core.kvstore import (
     INVALID_KEY, KV, Edges, Reducer, edges_to_host, finalize_reduce, make_kv,
-    next_bucket, segment_reduce, sort_edges,
+    next_bucket, sort_edges,
 )
 from repro.core.mrbg_store import MRBGStore
 from repro.kernels import jitcache, ops
@@ -232,28 +232,15 @@ def _merge_reduce(reducer: Reducer, key_cap: int, backend: Optional[str],
     counts [key_cap]).
     """
     jitcache.count_trace("incremental._merge_reduce")
-    merged = sort_edges(combined, num_keys=2, backend=backend)
-
-    # last-writer-wins per (k2, mk); tombstones delete
-    nk2 = jnp.roll(merged.k2, -1)
-    nmk = jnp.roll(merged.mk, -1)
-    n = merged.k2.shape[0]
-    is_last = jnp.logical_or(
-        jnp.arange(n) == n - 1,
-        jnp.logical_or(nk2 != merged.k2, nmk != merged.mk))
-    live = merged.valid & is_last & (merged.sign > 0)
-    merged = Edges(merged.k2, merged.mk, merged.v2, live,
-                   jnp.ones(n, jnp.int8))
-
-    # route each edge to its affected-key slot
-    local = jnp.searchsorted(affected_keys, merged.k2).astype(jnp.int32)
-    in_set = jnp.take(affected_keys,
-                      jnp.clip(local, 0, key_cap - 1)) == merged.k2
-    acc, counts = segment_reduce(reducer, local, merged.v2,
-                                 merged.valid & in_set, key_cap,
-                                 backend=backend)
-    values = finalize_reduce(reducer, affected_keys, acc, counts)
-    return merged, values, counts
+    # the whole sort -> last-writer-wins -> segment-reduce chain lives in
+    # ops.shuffle_reduce (fused into one kernel on the pallas backend)
+    sr = ops.shuffle_reduce(reducer, combined.k2, combined.mk, combined.v2,
+                            combined.valid, combined.sign, affected_keys,
+                            backend=backend)
+    n = sr.k2.shape[0]
+    merged = Edges(sr.k2, sr.mk, sr.values, sr.live, jnp.ones(n, jnp.int8))
+    values = finalize_reduce(reducer, affected_keys, sr.acc, sr.counts)
+    return merged, values, sr.counts
 
 
 def incremental_onestep(spec: JobSpec, delta: DeltaKV, store: MRBGStore,

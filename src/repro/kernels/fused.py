@@ -1,0 +1,265 @@
+"""Fused shuffle+merge+Reduce — one kernel from sorted tiles to segments.
+
+The engine's merge path (``incremental._merge_reduce``) is sort → roll-
+compare last-writer-wins → searchsorted routing → one-hot segment matmul,
+which costs an HBM round-trip between every step.  This module collapses
+the chain for the sum/mean monoids:
+
+  * inputs that fit one VMEM tile run ONE kernel: the stable 3-lane
+    bitonic network (carrying the value rows, validity and sign lanes
+    through every compare-exchange), the last-writer-wins scan, the
+    affected-key one-hot and the MXU accumulation — the shuffle+reduce
+    touches HBM exactly once in each direction;
+  * larger inputs sort via the multi-tile network
+    (``sort_u32.sorted_lanes``), gather the payload once through the
+    permutation, and feed the sorted tiles straight into a fused
+    LWW+reduce kernel — per tile, the merge decision and the segment
+    accumulation happen in VMEM without re-materializing intermediate
+    live masks or segment ids in HBM.  Cross-tile last-writer boundaries
+    are resolved by handing each tile its successor's first (k2, mk).
+
+Key routing is one-hot *equality* against the sorted ``affected_keys``
+vector (segment id = the slot whose key matches), which is exactly the
+searchsorted+membership test of the unfused path for a sorted, unique,
+INVALID_KEY-padded key set — pad slots can't match because dead rows are
+masked out of the one-hot.  ``repro.kernels.ops.shuffle_reduce`` is the
+dispatcher that decides when this path applies; this module is pure
+mechanism.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sort_u32 import (
+    SORT_TILE, _lex_lt, default_interpret, pad_lanes, padded_length,
+    sorted_lanes,
+)
+
+FUSED_KBLK = 512        # affected-key block for the multi-tile reduce
+
+
+def _sort_lww_reduce_kernel(hi_ref, lo_ref, idx_ref, val_ref, vld_ref,
+                            sgn_ref, key_ref, ho_ref, lo_o_ref, po_ref,
+                            vo_ref, live_ref, acc_ref, cnt_ref, *, m: int):
+    """Single-tile total fusion: network + LWW + one-hot reduce, one launch.
+
+    Only the three int lanes ride the compare-exchange stages; the index
+    lane *is* the sort permutation, so the payload (values, validity,
+    sign) is gathered once afterwards — still inside the kernel, so the
+    whole shuffle+merge+reduce is a single HBM round-trip.  (Routing the
+    payload through every stage is semantically identical but makes XLA's
+    CPU fusion pass blow up exponentially on the chained 2-D gathers.)
+    """
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    idx = idx_ref[...]
+    pos = jax.lax.iota(jnp.int32, m)
+
+    k = 2
+    while k <= m:
+        j = k // 2
+        while j >= 1:
+            partner = jnp.bitwise_xor(pos, j)
+            ph = hi[partner]
+            plo = lo[partner]
+            pi = idx[partner]
+            up = (jnp.bitwise_and(pos, k) == 0)
+            want_min = up == (pos < partner)
+            own_lt = _lex_lt(hi, lo, idx, ph, plo, pi)
+            take_own = jnp.where(want_min, own_lt, ~own_lt)
+            sel = lambda a, b: jnp.where(take_own, a, b)
+            hi, lo, idx = sel(hi, ph), sel(lo, plo), sel(idx, pi)
+            j //= 2
+        k *= 2
+
+    val = val_ref[...][idx]
+    vld = vld_ref[...][idx]
+    sgn = sgn_ref[...][idx]
+
+    # last-writer-wins per (k2, mk); tombstones (sign <= 0) delete
+    nhi = jnp.roll(hi, -1)
+    nlo = jnp.roll(lo, -1)
+    is_last = (pos == m - 1) | (nhi != hi) | (nlo != lo)
+    live = (vld != 0) & is_last & (sgn > 0)
+
+    keys = key_ref[...]
+    onehot = (hi[:, None] == keys[None, :]) & live[:, None]
+    acc_t = acc_ref.dtype
+    acc_ref[...] = jnp.dot(onehot.astype(acc_t).T, val.astype(acc_t),
+                           preferred_element_type=acc_t)
+    cnt_ref[...] = jnp.sum(onehot.astype(jnp.int32), axis=0)
+    ho_ref[...] = hi
+    lo_o_ref[...] = lo
+    po_ref[...] = idx
+    vo_ref[...] = val
+    live_ref[...] = live.astype(jnp.int32)
+
+
+def _lww_reduce_kernel(hi_ref, lo_ref, val_ref, vld_ref, sgn_ref, nh_ref,
+                       nl_ref, key_ref, live_ref, acc_ref, cnt_ref, *,
+                       tile: int, tiles: int, kblk: int):
+    """Multi-tile epilogue: sorted tile -> live mask -> segment block.
+
+    Grid (tiles, kblocks); the output segment block stays resident across
+    the tile loop (stationary-output index map, init at the first tile).
+    ``nh/nl`` carry the successor tile's first (k2, mk) so the
+    last-writer test never needs a second HBM pass over the sorted lanes.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    pos = jax.lax.iota(jnp.int32, tile)
+    at_edge = pos == tile - 1
+    nhi = jnp.where(at_edge, nh_ref[0], jnp.roll(hi, -1))
+    nlo = jnp.where(at_edge, nl_ref[0], jnp.roll(lo, -1))
+    is_last = (nhi != hi) | (nlo != lo)
+    is_last = is_last | ((i == tiles - 1) & at_edge)
+    live = (vld_ref[...] != 0) & is_last & (sgn_ref[...] > 0)
+    live_ref[...] = live.astype(jnp.int32)
+
+    keys = key_ref[...]
+    onehot = (hi[:, None] == keys[None, :]) & live[:, None]
+    acc_t = acc_ref.dtype
+    acc_ref[...] += jnp.dot(onehot.astype(acc_t).T,
+                            val_ref[...].astype(acc_t),
+                            preferred_element_type=acc_t)
+    cnt_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def _pad_rows_to(a: jax.Array, m: int, fill=0):
+    n = a.shape[0]
+    if m == n:
+        return a
+    return jnp.concatenate(
+        [a, jnp.full((m - n,) + a.shape[1:], fill, a.dtype)])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "tile", "kblk", "interpret"))
+def fused_shuffle_reduce(k2: jax.Array, mk: jax.Array, vals: jax.Array,
+                         valid: jax.Array, sign: jax.Array,
+                         affected_keys: jax.Array, *, out_dtype,
+                         tile: int = SORT_TILE, kblk: int = FUSED_KBLK,
+                         interpret: bool | None = None):
+    """Sort (k2, mk) stably, merge last-writer-wins, sum live rows per key.
+
+    ``vals`` is [N, D]; ``affected_keys`` is sorted ascending, unique among
+    real entries, padded with int32 max.  Returns
+    ``(k2_s, mk_s, vals_s, live, perm, acc, counts)`` — the first five are
+    the sorted/merged rows (length N), ``acc`` is [key_cap, D] in
+    ``out_dtype`` and ``counts`` [key_cap] int32 counts the live rows per
+    affected key.  Invalid rows must already carry k2 = int32 max.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if tile & (tile - 1):
+        raise ValueError(f"tile must be a power of two, got {tile}")
+    n = k2.shape[0]
+    d = vals.shape[1]
+    key_cap = affected_keys.shape[0]
+    assert n > 0 and key_cap > 0, "dispatcher must route empty inputs to xla"
+
+    m = padded_length(n, tile)
+    hi, lo = pad_lanes(k2, mk, m)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    val = _pad_rows_to(vals, m)
+    vld = _pad_rows_to(valid.astype(jnp.int32), m)
+    sgn = _pad_rows_to(sign.astype(jnp.int32), m)
+
+    if m <= tile:
+        # whole problem in VMEM: one launch end to end
+        kfull = key_cap
+        outs = pl.pallas_call(
+            functools.partial(_sort_lww_reduce_kernel, m=m),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m, d), lambda i: (0, 0)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((kfull,), lambda i: (0,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((m, d), lambda i: (0, 0)),
+                pl.BlockSpec((m,), lambda i: (0,)),
+                pl.BlockSpec((kfull, d), lambda i: (0, 0)),
+                pl.BlockSpec((kfull,), lambda i: (0,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((m,), k2.dtype),
+                jax.ShapeDtypeStruct((m,), mk.dtype),
+                jax.ShapeDtypeStruct((m,), jnp.int32),
+                jax.ShapeDtypeStruct((m, d), vals.dtype),
+                jax.ShapeDtypeStruct((m,), jnp.int32),
+                jax.ShapeDtypeStruct((kfull, d), out_dtype),
+                jax.ShapeDtypeStruct((kfull,), jnp.int32),
+            ],
+            interpret=interpret,
+        )(hi, lo, idx, val, vld, sgn, affected_keys)
+        hi_s, lo_s, perm, val_s, live, acc, cnt = outs
+        return (hi_s[:n], lo_s[:n], val_s[:n], live[:n] != 0, perm[:n],
+                acc, cnt)
+
+    # multi-tile: sort the lanes, gather the payload once, then the fused
+    # LWW+reduce epilogue per (sorted tile, key block)
+    hi_s, lo_s, perm = sorted_lanes(hi, lo, idx, tile=tile,
+                                    interpret=interpret)
+    val_s = jnp.take(val, perm, axis=0)
+    vld_s = jnp.take(vld, perm, axis=0)
+    sgn_s = jnp.take(sgn, perm, axis=0)
+
+    tiles = m // tile
+    sentinel = jnp.iinfo(jnp.int32).max
+    nxt_hi = jnp.concatenate([hi_s[tile::tile],
+                              jnp.array([sentinel], hi_s.dtype)])
+    nxt_lo = jnp.concatenate([lo_s[tile::tile],
+                              jnp.array([sentinel], lo_s.dtype)])
+
+    kblk = min(kblk, key_cap)
+    kpad = (kblk - key_cap % kblk) % kblk
+    keys = _pad_rows_to(affected_keys, key_cap + kpad, fill=sentinel)
+    kfull = key_cap + kpad
+
+    live, acc, cnt = pl.pallas_call(
+        functools.partial(_lww_reduce_kernel, tile=tile, tiles=tiles,
+                          kblk=kblk),
+        grid=(tiles, kfull // kblk),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((kblk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((kblk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((kblk,), lambda i, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((kfull, d), out_dtype),
+            jax.ShapeDtypeStruct((kfull,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi_s, lo_s, val_s, vld_s, sgn_s, nxt_hi, nxt_lo, keys)
+    return (hi_s[:n], lo_s[:n], val_s[:n], live[:n] != 0, perm[:n],
+            acc[:key_cap], cnt[:key_cap])

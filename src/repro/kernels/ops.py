@@ -31,6 +31,7 @@ bit-for-bit on integer data and to reordering-of-additions on floats;
 """
 from __future__ import annotations
 
+import math
 import os
 from typing import Any, NamedTuple, Optional
 
@@ -93,8 +94,13 @@ class use_backend:
 
 
 def _interpret() -> bool:
-    """Pallas interpret mode everywhere but real TPU."""
-    return jax.default_backend() != "tpu"
+    """Pallas interpret mode everywhere but real TPU.
+
+    Delegates to :func:`repro.kernels.sort_u32.default_interpret`, which
+    honors the ``REPRO_PALLAS_INTERPRET`` override.
+    """
+    from repro.kernels.sort_u32 import default_interpret
+    return default_interpret()
 
 
 # ---------------------------------------------------------------------------
@@ -207,27 +213,151 @@ def _segment_reduce_xla(kind, seg, values, valid, num_segments,
 
 def _segment_reduce_pallas(kind, seg, values, valid, num_segments):
     from repro.kernels.segment_reduce import (
-        segment_minmax_mxu, segment_sum_mxu,
+        segment_minmax_mxu, segment_sum_counts_mxu, segment_sum_mxu,
     )
     interp = _interpret()
-
-    def _one(leaf):
-        leaf = _mask_leaf(kind, leaf, valid)
-        flat = leaf.reshape(leaf.shape[0], -1)       # >2-D leaves flatten
+    leaves, treedef = jax.tree.flatten(values)
+    counts = None
+    outs = []
+    for leaf in leaves:
+        masked = _mask_leaf(kind, leaf, valid)
+        width = math.prod(masked.shape[1:])          # -1 breaks on 0 rows
+        flat = masked.reshape(masked.shape[0], width)
         if kind in ("sum", "mean"):
             out_dtype = (jnp.int32 if jnp.issubdtype(leaf.dtype, jnp.integer)
                          else jnp.float32)
-            out = segment_sum_mxu(seg, flat, num_segments + 1,
-                                  out_dtype=out_dtype, interpret=interp)
+            if counts is None:
+                # the counts ride the first sum leaf's launch for free
+                # (one-hot column sums; invalid rows sit in the scratch
+                # segment, so segments < num_segments count valid rows only)
+                out, cnt = segment_sum_counts_mxu(
+                    seg, flat, num_segments + 1, out_dtype=out_dtype,
+                    interpret=interp)
+                counts = cnt[:num_segments]
+            else:
+                out = segment_sum_mxu(seg, flat, num_segments + 1,
+                                      out_dtype=out_dtype, interpret=interp)
             out = out.astype(leaf.dtype)
         else:
             out = segment_minmax_mxu(kind, seg, flat, num_segments + 1,
                                      interpret=interp)
         out = out[:num_segments]
-        return out.reshape((num_segments,) + leaf.shape[1:])
+        outs.append(out.reshape((num_segments,) + leaf.shape[1:]))
 
-    acc = jax.tree.map(_one, values)
-    counts = segment_sum_mxu(seg, valid.astype(jnp.int32)[:, None],
-                             num_segments + 1, out_dtype=jnp.int32,
-                             interpret=interp)[:num_segments, 0]
+    acc = jax.tree.unflatten(treedef, outs)
+    if counts is None:
+        counts = segment_sum_mxu(seg, valid.astype(jnp.int32)[:, None],
+                                 num_segments + 1, out_dtype=jnp.int32,
+                                 interpret=interp)[:num_segments, 0]
     return acc, counts
+
+
+# ---------------------------------------------------------------------------
+# shuffle_reduce: the fused shuffle+merge+Reduce hot path
+# ---------------------------------------------------------------------------
+
+class ShuffleReduced(NamedTuple):
+    """Sorted+merged rows plus the per-affected-key reduction."""
+
+    k2: jax.Array        # [N] sorted primary keys (invalid rows at tail)
+    mk: jax.Array        # [N] co-sorted secondary keys
+    values: Any          # pytree of [N, ...] gathered through perm
+    live: jax.Array      # [N] bool: last writer per (k2, mk), not a tombstone
+    perm: jax.Array      # [N] int32 sort permutation
+    acc: Any             # pytree of [key_cap, ...] accumulated live values
+    counts: jax.Array    # [key_cap] int32 live rows per affected key
+
+
+_INT32_MAX = 2**31 - 1
+_FUSED_MAX_D = 512       # value width cap for the fused kernel's VMEM tile
+_FUSED_MAX_KEYS = 4096   # affected-key cap (single one-hot block per tile)
+
+
+def _can_fuse(kind: str, leaves, n: int, key_cap: int) -> bool:
+    return (kind in ("sum", "mean") and len(leaves) == 1
+            and leaves[0].ndim <= 2 and n > 0
+            and 0 < key_cap <= _FUSED_MAX_KEYS
+            and (leaves[0].size // max(n, 1)) <= _FUSED_MAX_D)
+
+
+def shuffle_reduce(reducer, k2: jax.Array, mk: jax.Array, values: Any,
+                   valid: jax.Array, sign: jax.Array,
+                   affected_keys: jax.Array, *,
+                   backend: Optional[str] = None,
+                   fused: Optional[bool] = None) -> ShuffleReduced:
+    """Shuffle-sort, last-writer-wins merge, and reduce in one call.
+
+    The engine's whole merge hot path: rows are sorted stably by (k2, mk)
+    (invalid rows masked to the tail), the last row of each (k2, mk) run
+    survives if its sign is positive (tombstones delete), and the live
+    rows' values are reduced into the slots of ``affected_keys`` (sorted
+    ascending, unique, padded with int32 max; ``counts`` counts live rows
+    per slot, mean division stays with ``finalize_reduce``).
+
+    ``fused=None`` picks the fused Pallas kernel automatically when the
+    backend is pallas and the monoid supports it (sum/mean, single
+    modest-width value leaf); ``False`` forces the composed path;
+    ``True`` requires fusion and raises where unsupported.  Both paths
+    implement the identical contract — the composed path on xla is the
+    bitwise reference.
+    """
+    bk = resolve_backend(backend)
+    kind = _kind_of(reducer)
+    n = k2.shape[0]
+    key_cap = affected_keys.shape[0]
+    leaves, treedef = jax.tree.flatten(values)
+    fusable = bk == "pallas" and _can_fuse(kind, leaves, n, key_cap)
+    if fused and not fusable:
+        raise ValueError(
+            "fused shuffle_reduce requires the pallas backend, a sum/mean "
+            "reducer, and a single value leaf of width <= "
+            f"{_FUSED_MAX_D} with 0 < key_cap <= {_FUSED_MAX_KEYS}")
+    if fusable and fused is not False:
+        return _shuffle_reduce_fused(kind, k2, mk, leaves[0], treedef,
+                                     valid, sign, affected_keys)
+    return _shuffle_reduce_composed(reducer, kind, bk, k2, mk, values,
+                                    valid, sign, affected_keys)
+
+
+def _shuffle_reduce_composed(reducer, kind, bk, k2, mk, values, valid, sign,
+                             affected_keys) -> ShuffleReduced:
+    n = k2.shape[0]
+    key_cap = affected_keys.shape[0]
+    k2m = jnp.where(valid, k2, jnp.int32(_INT32_MAX))
+    res = sort_pairs(k2m, mk, (values, valid, sign), num_keys=2, backend=bk)
+    vals_s, valid_s, sign_s = res.payload
+
+    # last-writer-wins per (k2, mk); tombstones delete
+    nk2 = jnp.roll(res.k2, -1)
+    nmk = jnp.roll(res.mk, -1)
+    is_last = jnp.logical_or(
+        jnp.arange(n) == n - 1,
+        jnp.logical_or(nk2 != res.k2, nmk != res.mk))
+    live = valid_s & is_last & (sign_s > 0)
+
+    # route each live row to its affected-key slot
+    local = jnp.searchsorted(affected_keys, res.k2).astype(jnp.int32)
+    in_set = jnp.take(affected_keys,
+                      jnp.clip(local, 0, key_cap - 1)) == res.k2
+    acc, counts = segment_reduce(reducer, local, vals_s, live & in_set,
+                                 key_cap, backend=bk)
+    return ShuffleReduced(res.k2, res.mk, vals_s, live, res.perm, acc,
+                          counts)
+
+
+def _shuffle_reduce_fused(kind, k2, mk, leaf, treedef, valid, sign,
+                          affected_keys) -> ShuffleReduced:
+    from repro.kernels.fused import fused_shuffle_reduce
+    key_cap = affected_keys.shape[0]
+    out_dtype = (jnp.int32 if jnp.issubdtype(leaf.dtype, jnp.integer)
+                 else jnp.float32)
+    k2m = jnp.where(valid, k2, jnp.int32(_INT32_MAX))
+    flat = leaf.reshape(leaf.shape[0], -1)
+    k2s, mks, vals_s, live, perm, acc, counts = fused_shuffle_reduce(
+        k2m, mk, flat, valid, sign, affected_keys, out_dtype=out_dtype,
+        interpret=_interpret())
+    vals_s = vals_s.reshape(leaf.shape)
+    acc = acc.astype(leaf.dtype).reshape((key_cap,) + leaf.shape[1:])
+    return ShuffleReduced(k2s, mks, jax.tree.unflatten(treedef, [vals_s]),
+                          live, perm, jax.tree.unflatten(treedef, [acc]),
+                          counts)

@@ -10,19 +10,29 @@ The grid walks (row tiles x output blocks); each output block stays
 resident in VMEM across the row-tile loop (BlockSpec index_map pins it),
 accumulating partial sums — the classic stationary-output tiling.
 
-Three kernels cover all four ``Reducer`` monoids:
+Three kernel families cover all four ``Reducer`` monoids:
 
-  * ``segment_sum_mxu``    — sum and mean (mean = sum + count, the division
-    happens in ``kvstore.finalize_reduce``); integer values accumulate in
-    int32, floats in float32.
-  * ``segment_minmax_mxu`` — min and max via a masked one-hot select
-    (``where(onehot, vals, identity)`` reduced over the row axis); the MXU
-    cannot min/max-accumulate, so this leg runs on the VPU with the same
-    stationary-output tiling.
-  * ``segment_reduce_mxu`` — the original float32 sum entry point, kept as
-    the benchmark/back-compat surface.
+  * ``segment_sum_mxu``        — sum and mean (mean = sum + count, the
+    division happens in ``kvstore.finalize_reduce``); integer values
+    accumulate in int32, floats in float32.
+  * ``segment_sum_counts_mxu`` — the same matmul with the per-segment row
+    counts as a second output of the *same* launch (counts are the one-hot
+    column sums, already resident), so the dispatcher's (acc, counts)
+    contract costs one kernel instead of two.
+  * ``segment_minmax_mxu``     — min/max via a *sublane* reduction: rows
+    stream through in chunks of ``SUBLANES`` (the VPU's 8-row register
+    height), each chunk masked against the one-hot block and folded into a
+    stationary [kblk, D] accumulator.  Peak intermediate is
+    [SUBLANES, kblk, D] — the old masked-select kernel materialized the
+    full [rows, kblk, D] cube, which is why its tile knobs were clamped to
+    a quarter of the sum kernel's; they now share the same defaults.
+  * ``segment_reduce_mxu``     — the original float32 sum entry point,
+    kept as the benchmark/back-compat surface.
 
-``repro.kernels.ref`` holds the pure-jnp oracles.
+Degenerate inputs (no rows, no segments) return empty/identity results
+instead of tripping the tiling math.  ``interpret`` defaults to platform
+auto-detection (``REPRO_PALLAS_INTERPRET`` overrides).  ``repro.kernels.
+ref`` holds the pure-jnp oracles.
 """
 from __future__ import annotations
 
@@ -34,11 +44,26 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import segment_minmax_ref, segment_reduce_ref  # noqa: F401
+from repro.kernels.sort_u32 import default_interpret
 
-DEFAULT_ROWS = 512      # rows per tile
-DEFAULT_KBLK = 512      # output segments per block
-MINMAX_ROWS = 256       # the select kernel materializes [rows, kblk, D]
-MINMAX_KBLK = 128
+DEFAULT_ROWS = 1024     # rows per tile
+DEFAULT_KBLK = 256      # output segments per block: small blocks make the
+                        # sorted-input block-skip (see _block_live) bite
+MINMAX_ROWS = DEFAULT_ROWS   # sublane kernel: no cubic intermediate to cap
+MINMAX_KBLK = DEFAULT_KBLK
+SUBLANES = 8            # VPU register height: min/max chunk size
+
+
+def _block_live(seg, base: int, kblk: int):
+    """True iff any row of this tile lands in output block [base, base+kblk).
+
+    The shuffle feeds the reducer *sorted* segment ids, so most
+    (row tile x output block) grid pairs are empty; gating the matmul on
+    this cheap VPU range test turns the grid from dense O(n/R * K/kblk)
+    matmuls into the ~O(n/R + K/kblk) non-empty band.  Unsorted ids stay
+    correct — the test is exact, just less often false.
+    """
+    return jnp.any((seg >= base) & (seg < base + kblk))
 
 
 def _sum_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
@@ -49,14 +74,41 @@ def _sum_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     seg = seg_ref[...]                        # [rows]
-    vals = val_ref[...]                       # [rows, D]
     base = pl.program_id(1) * kblk
-    local = seg - base
-    onehot = (local[:, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
-    onehot = onehot.astype(vals.dtype)
-    out_ref[...] += jnp.dot(onehot.T, vals,
-                            preferred_element_type=out_ref.dtype)
+
+    @pl.when(_block_live(seg, base, kblk))
+    def _work():
+        vals = val_ref[...]                   # [rows, D]
+        local = seg - base
+        onehot = (local[:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
+        onehot = onehot.astype(vals.dtype)
+        out_ref[...] += jnp.dot(onehot.T, vals,
+                                preferred_element_type=out_ref.dtype)
+
+
+def _sum_counts_kernel(seg_ref, val_ref, out_ref, cnt_ref, *, kblk: int,
+                       rows: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    seg = seg_ref[...]
+    base = pl.program_id(1) * kblk
+
+    @pl.when(_block_live(seg, base, kblk))
+    def _work():
+        vals = val_ref[...]
+        local = seg - base
+        onehot = (local[:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
+        cnt_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)[:, None]
+        onehot = onehot.astype(vals.dtype)
+        out_ref[...] += jnp.dot(onehot.T, vals,
+                                preferred_element_type=out_ref.dtype)
 
 
 def _minmax_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int,
@@ -67,28 +119,45 @@ def _minmax_kernel(seg_ref, val_ref, out_ref, *, kblk: int, rows: int,
     def _init():
         out_ref[...] = jnp.full_like(out_ref, ident)
 
-    seg = seg_ref[...]
-    vals = val_ref[...]
     base = pl.program_id(1) * kblk
-    local = seg - base
-    onehot = (local[:, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (rows, kblk), 1))
-    # masked select: rows outside this output block contribute the identity
-    expanded = jnp.where(onehot[:, :, None], vals[:, None, :],
-                         jnp.asarray(ident, vals.dtype))
-    if is_min:
-        out_ref[...] = jnp.minimum(out_ref[...], expanded.min(axis=0))
-    else:
-        out_ref[...] = jnp.maximum(out_ref[...], expanded.max(axis=0))
+    d = val_ref.shape[1]
+    dtype = val_ref.dtype
+    fold = jnp.minimum if is_min else jnp.maximum
+    kiota = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, kblk), 1)
+    idval = jnp.asarray(ident, dtype)
+
+    @pl.when(_block_live(seg_ref[...], base, kblk))
+    def _work():
+        def chunk(c, acc):
+            r0 = c * SUBLANES
+            seg8 = seg_ref[pl.ds(r0, SUBLANES)] - base    # [8]
+            vals8 = val_ref[pl.ds(r0, SUBLANES), :]       # [8, D]
+            onehot = seg8[:, None] == kiota               # [8, kblk]
+            masked = jnp.where(onehot[:, :, None], vals8[:, None, :], idval)
+            red = masked.min(axis=0) if is_min else masked.max(axis=0)
+            return fold(acc, red)
+
+        acc0 = jnp.full((kblk, d), ident, dtype)
+        acc = jax.lax.fori_loop(0, rows // SUBLANES, chunk, acc0)
+        out_ref[...] = fold(out_ref[...], acc)
 
 
-def _pad_rows(seg, vals, rows, num_segments):
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _pad_rows(seg, vals, rows, num_segments, *, fill=0, multiple=1):
+    """Clamp the row tile to the (padded) input and pad rows to a multiple.
+
+    Callers guarantee ``n > 0``; padding rows carry segment id
+    ``num_segments`` (the scratch segment) and ``fill`` values.
+    """
     n, d = vals.shape
-    rows = min(rows, n)
+    rows = max(multiple, _round_up(min(rows, n), multiple))
     if n % rows != 0:
         pad = rows - n % rows
         seg = jnp.concatenate([seg, jnp.full(pad, num_segments, seg.dtype)])
-        vals = jnp.concatenate([vals, jnp.zeros((pad, d), vals.dtype)])
+        vals = jnp.concatenate([vals, jnp.full((pad, d), fill, vals.dtype)])
     return seg, vals, rows
 
 
@@ -104,12 +173,19 @@ def _kblocks(num_segments, kblk):
 def segment_sum_mxu(seg: jax.Array, vals: jax.Array, num_segments: int, *,
                     out_dtype=jnp.float32, rows: int = DEFAULT_ROWS,
                     kblk: int = DEFAULT_KBLK,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """seg [N] int32 (invalid rows: any id >= num_segments), vals [N, D].
 
     Returns [num_segments, D] sums in ``out_dtype``.  Padding rows outside
     [0, num_segments) may land in the kblk overhang; the slice drops them.
     """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = vals.shape
+    if num_segments <= 0:
+        return jnp.zeros((max(num_segments, 0), d), out_dtype)
+    if n == 0:
+        return jnp.zeros((num_segments, d), out_dtype)
     seg, vals, rows = _pad_rows(seg, vals, rows, num_segments)
     n, d = vals.shape
     kblk, kfull = _kblocks(num_segments, kblk)
@@ -130,28 +206,75 @@ def segment_sum_mxu(seg: jax.Array, vals: jax.Array, num_segments: int, *,
 
 
 @functools.partial(jax.jit,
+                   static_argnames=("num_segments", "out_dtype", "rows",
+                                    "kblk", "interpret"))
+def segment_sum_counts_mxu(seg: jax.Array, vals: jax.Array,
+                           num_segments: int, *, out_dtype=jnp.float32,
+                           rows: int = DEFAULT_ROWS,
+                           kblk: int = DEFAULT_KBLK,
+                           interpret: bool | None = None):
+    """One launch for the dispatcher's (sums [K, D], counts [K]) contract.
+
+    ``counts`` are the one-hot column sums — exactly what
+    ``jax.ops.segment_sum(ones)`` would produce, without re-reading the
+    segment ids from HBM in a second kernel.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = vals.shape
+    if num_segments <= 0:
+        k = max(num_segments, 0)
+        return (jnp.zeros((k, d), out_dtype), jnp.zeros(k, jnp.int32))
+    if n == 0:
+        return (jnp.zeros((num_segments, d), out_dtype),
+                jnp.zeros(num_segments, jnp.int32))
+    seg, vals, rows = _pad_rows(seg, vals, rows, num_segments)
+    n, d = vals.shape
+    kblk, kfull = _kblocks(num_segments, kblk)
+    if jnp.issubdtype(vals.dtype, jnp.integer):
+        vals = vals.astype(out_dtype)
+    out, cnt = pl.pallas_call(
+        functools.partial(_sum_counts_kernel, kblk=kblk, rows=rows),
+        grid=(n // rows, kfull // kblk),
+        in_specs=[
+            pl.BlockSpec((rows,), lambda i, j: (i,)),
+            pl.BlockSpec((rows, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((kblk, d), lambda i, j: (j, 0)),
+                   pl.BlockSpec((kblk, 1), lambda i, j: (j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((kfull, d), out_dtype),
+                   jax.ShapeDtypeStruct((kfull, 1), jnp.int32)],
+        interpret=interpret,
+    )(seg.astype(jnp.int32), vals)
+    return out[:num_segments], cnt[:num_segments, 0]
+
+
+@functools.partial(jax.jit,
                    static_argnames=("kind", "num_segments", "rows", "kblk",
                                     "interpret"))
 def segment_minmax_mxu(kind: str, seg: jax.Array, vals: jax.Array,
                        num_segments: int, *, rows: int = MINMAX_ROWS,
                        kblk: int = MINMAX_KBLK,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Segment min/max; empty segments hold the reduction identity."""
     assert kind in ("min", "max"), kind
+    if interpret is None:
+        interpret = default_interpret()
     if jnp.issubdtype(vals.dtype, jnp.floating):
         # XLA's segment_min/max identity for empty float segments is ±inf
         ident = float("inf") if kind == "min" else float("-inf")
     else:
         info = jnp.iinfo(vals.dtype)
         ident = info.max if kind == "min" else info.min
-    n0 = vals.shape[0]
-    # pad rows with the identity (not zero) so padding never wins
-    rows = min(rows, n0)
-    if n0 % rows != 0:
-        pad = rows - n0 % rows
-        seg = jnp.concatenate([seg, jnp.full(pad, num_segments, seg.dtype)])
-        vals = jnp.concatenate(
-            [vals, jnp.full((pad, vals.shape[1]), ident, vals.dtype)])
+    n, d = vals.shape
+    if num_segments <= 0:
+        return jnp.full((max(num_segments, 0), d), ident, vals.dtype)
+    if n == 0:
+        return jnp.full((num_segments, d), ident, vals.dtype)
+    # pad rows with the identity (not zero) so padding never wins, and to a
+    # sublane multiple so the chunked scan tiles evenly
+    seg, vals, rows = _pad_rows(seg, vals, rows, num_segments, fill=ident,
+                                multiple=SUBLANES)
     n, d = vals.shape
     kblk, kfull = _kblocks(num_segments, kblk)
     out = pl.pallas_call(
@@ -174,7 +297,7 @@ def segment_minmax_mxu(kind: str, seg: jax.Array, vals: jax.Array,
                                     "interpret"))
 def segment_reduce_mxu(seg: jax.Array, vals: jax.Array, num_segments: int,
                        *, rows: int = DEFAULT_ROWS, kblk: int = DEFAULT_KBLK,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Original float32-sum entry point (benchmarks, back-compat)."""
     return segment_sum_mxu(seg, vals.astype(jnp.float32), num_segments,
                            out_dtype=jnp.float32, rows=rows, kblk=kblk,

@@ -1,11 +1,10 @@
-"""In-VMEM bitonic sort of key/payload lanes — the shuffle-sort on TPU.
+"""Multi-tile bitonic sort of key/payload lanes — the shuffle-sort on TPU.
 
 Hadoop's shuffle sorts spill files with comparison mergesort on the CPU;
-the TPU analogue is a data-parallel bitonic network over a VMEM-resident
-tile: log²(T) compare-exchange stages, each a vectorized select between a
+the TPU analogue is a data-parallel bitonic network over VMEM-resident
+tiles: log²(T) compare-exchange stages, each a vectorized select between a
 tile and its stride-permuted self (no data-dependent control flow, VPU
-friendly).  Larger inputs are handled by the host-side run-merge in
-MRBG-Store (this kernel is the per-tile building block).
+friendly).
 
 The network sorts three int lanes lexicographically: a primary key, a
 secondary key, and the original row index.  Because the index lane is
@@ -17,11 +16,29 @@ stability for its last-writer-wins semantics, and arbitrary pytree
 payloads are gathered once through the permutation instead of riding
 through every compare-exchange stage.
 
-``repro.kernels.ref`` holds the pure-jnp oracles.
+Inputs larger than one VMEM tile are handled by splitting the global
+bitonic network at tile granularity (``SORT_TILE`` rows per tile):
+
+  * a per-tile pass runs every stage with compare distance ``j < tile``
+    entirely in VMEM (directions follow the *global* position, so each
+    tile computes its slice of the one global network);
+  * each stage with ``j >= tile`` pairs whole tiles (partner tile =
+    ``tile_index XOR j/tile``) and becomes one grid launch over tile
+    pairs, two tiles resident in VMEM per step.
+
+Total work stays the bitonic O(n log² n) while VMEM is bounded by the
+tile size — the old pad-the-whole-input-to-one-power-of-two block (and
+its fall-off-a-cliff behavior past a few thousand rows) is gone.  Inputs
+that do fit one tile take the exact single-launch path they always did.
+
+``interpret`` defaults to auto-detection (interpret off TPU, native on
+TPU); set ``REPRO_PALLAS_INTERPRET=0/1`` to override.  ``repro.kernels.
+ref`` holds the pure-jnp oracles.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -30,20 +47,46 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.ref import sort_kv32_ref  # noqa: F401  (back-compat)
 
+SORT_TILE = 4096        # rows per VMEM tile (power of two)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU.
+
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode on TPU (debugging);
+    ``REPRO_PALLAS_INTERPRET=0`` forces native lowering off TPU (fails
+    loudly where Mosaic is unavailable — useful for lowering checks).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env != "":
+        if env.lower() in ("1", "true", "yes", "on"):
+            return True
+        if env.lower() in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET must be boolean-like, got {env!r}")
+    return jax.default_backend() != "tpu"
+
 
 def _lex_lt(ah, al, ai, bh, bl, bi):
     """(ah, al, ai) < (bh, bl, bi) lexicographically."""
     return jnp.where(ah != bh, ah < bh, jnp.where(al != bl, al < bl, ai < bi))
 
 
-def _stage(hi, lo, idx, j, k):
+def _stage(hi, lo, idx, j, k, base):
+    """One intra-tile compare-exchange stage of the *global* network.
+
+    ``base`` is the tile's global row offset: directions are a function of
+    global position, which is what lets independently launched tiles each
+    compute their slice of one coherent bitonic network.
+    """
     n = hi.shape[0]
     pos = jax.lax.iota(jnp.int32, n)
     partner = jnp.bitwise_xor(pos, j)
     ph = hi[partner]
     plo = lo[partner]
     pi = idx[partner]
-    up = (jnp.bitwise_and(pos, k) == 0)          # ascending region?
+    up = (jnp.bitwise_and(base + pos, k) == 0)   # ascending region?
     is_lo = pos < partner
     want_min = up == is_lo
     own_lt = _lex_lt(hi, lo, idx, ph, plo, pi)   # never equal: idx is unique
@@ -52,16 +95,18 @@ def _stage(hi, lo, idx, j, k):
     return sel(hi, ph), sel(lo, plo), sel(idx, pi)
 
 
-def _kernel(hi_ref, lo_ref, idx_ref, ho_ref, lo_out_ref, po_ref, *,
-            length: int):
+def _tile_sort_kernel(hi_ref, lo_ref, idx_ref, ho_ref, lo_out_ref, po_ref, *,
+                      tile: int):
+    """Stages k = 2..tile of the global network, one tile in VMEM."""
+    base = pl.program_id(0) * tile
     hi = hi_ref[...]
     lo = lo_ref[...]
     idx = idx_ref[...]
     k = 2
-    while k <= length:
+    while k <= tile:
         j = k // 2
         while j >= 1:
-            hi, lo, idx = _stage(hi, lo, idx, j, k)
+            hi, lo, idx = _stage(hi, lo, idx, j, k, base)
             j //= 2
         k *= 2
     ho_ref[...] = hi
@@ -69,53 +114,171 @@ def _kernel(hi_ref, lo_ref, idx_ref, ho_ref, lo_out_ref, po_ref, *,
     po_ref[...] = idx
 
 
+def _tile_finish_kernel(hi_ref, lo_ref, idx_ref, ho_ref, lo_out_ref, po_ref,
+                        *, tile: int, k: int):
+    """Stages j = tile/2..1 of round ``k`` (> tile), one tile in VMEM."""
+    base = pl.program_id(0) * tile
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    idx = idx_ref[...]
+    j = tile // 2
+    while j >= 1:
+        hi, lo, idx = _stage(hi, lo, idx, j, k, base)
+        j //= 2
+    ho_ref[...] = hi
+    lo_out_ref[...] = lo
+    po_ref[...] = idx
+
+
+def _cross_kernel(ahi_ref, alo_ref, ai_ref, bhi_ref, blo_ref, bi_ref,
+                  oh_ref, ol_ref, oi_ref, *, tile: int, k: int, dt: int):
+    """One cross-tile stage (compare distance j = dt * tile).
+
+    The grid runs over (tile pair, side): a pair's lower tile holds global
+    positions ``p`` and its upper tile ``p XOR j``, so the stage is a pure
+    elementwise compare-exchange between the two resident tiles.  The
+    ``side`` grid axis selects which half the step writes (a BlockSpec
+    maps one block per step), with both tiles resident either way.
+    """
+    p = pl.program_id(0)
+    side = pl.program_id(1)                        # 0 = lower, 1 = upper
+    lo_tile = (p // dt) * (2 * dt) + (p % dt)
+    up = jnp.bitwise_and(lo_tile * tile, k) == 0   # scalar: whole tile
+    ah, al, ai = ahi_ref[...], alo_ref[...], ai_ref[...]
+    bh, bl, bi = bhi_ref[...], blo_ref[...], bi_ref[...]
+    a_lt = _lex_lt(ah, al, ai, bh, bl, bi)         # never equal
+    take_a = jnp.where(up, a_lt, ~a_lt)            # lower position keeps min
+    want_a = take_a == (side == 0)                 # upper side keeps the rest
+    oh_ref[...] = jnp.where(want_a, ah, bh)
+    ol_ref[...] = jnp.where(want_a, al, bl)
+    oi_ref[...] = jnp.where(want_a, ai, bi)
+
+
+def _lane_specs(tile: int, index_map):
+    return [pl.BlockSpec((tile,), index_map) for _ in range(3)]
+
+
+def _lane_shapes(m: int, hi_dtype, lo_dtype):
+    return [jax.ShapeDtypeStruct((m,), hi_dtype),
+            jax.ShapeDtypeStruct((m,), lo_dtype),
+            jax.ShapeDtypeStruct((m,), jnp.int32)]
+
+
+def sorted_lanes(hi: jax.Array, lo: jax.Array, idx: jax.Array, *,
+                 tile: int, interpret: bool):
+    """Sort pre-padded (hi, lo, idx) lanes; length must be pow2·tile or a
+    pow2 below one tile.  The building block shared with ``kernels.fused``.
+    """
+    m = hi.shape[0]
+    if m <= tile:
+        # single tile: the whole network in one launch (the original path)
+        return pl.pallas_call(
+            functools.partial(_tile_sort_kernel, tile=m),
+            grid=(1,),
+            in_specs=_lane_specs(m, lambda i: (0,)),
+            out_specs=_lane_specs(m, lambda i: (0,)),
+            out_shape=_lane_shapes(m, hi.dtype, lo.dtype),
+            interpret=interpret,
+        )(hi, lo, idx)
+
+    tiles = m // tile
+    per_tile = lambda i: (i,)
+    hi, lo, idx = pl.pallas_call(
+        functools.partial(_tile_sort_kernel, tile=tile),
+        grid=(tiles,),
+        in_specs=_lane_specs(tile, per_tile),
+        out_specs=_lane_specs(tile, per_tile),
+        out_shape=_lane_shapes(m, hi.dtype, lo.dtype),
+        interpret=interpret,
+    )(hi, lo, idx)
+
+    k = tile * 2
+    while k <= m:
+        j = k // 2
+        while j >= tile:
+            dt = j // tile
+            lo_map = lambda p, s, dt=dt: ((p // dt) * (2 * dt) + (p % dt),)
+            hi_map = lambda p, s, dt=dt: (
+                (p // dt) * (2 * dt) + (p % dt) + dt,)
+            out_map = lambda p, s, dt=dt: (
+                (p // dt) * (2 * dt) + (p % dt) + s * dt,)
+            hi, lo, idx = pl.pallas_call(
+                functools.partial(_cross_kernel, tile=tile, k=k, dt=dt),
+                grid=(tiles // 2, 2),
+                in_specs=_lane_specs(tile, lo_map) + _lane_specs(tile, hi_map),
+                out_specs=_lane_specs(tile, out_map),
+                out_shape=_lane_shapes(m, hi.dtype, lo.dtype),
+                interpret=interpret,
+            )(hi, lo, idx, hi, lo, idx)
+            j //= 2
+        hi, lo, idx = pl.pallas_call(
+            functools.partial(_tile_finish_kernel, tile=tile, k=k),
+            grid=(tiles,),
+            in_specs=_lane_specs(tile, per_tile),
+            out_specs=_lane_specs(tile, per_tile),
+            out_shape=_lane_shapes(m, hi.dtype, lo.dtype),
+            interpret=interpret,
+        )(hi, lo, idx)
+        k *= 2
+    return hi, lo, idx
+
+
 def _type_max(dtype):
     return jnp.iinfo(dtype).max
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sort_lex_pallas(hi: jax.Array, lo: jax.Array, *, interpret: bool = True):
+def padded_length(n: int, tile: int) -> int:
+    """Pad policy: next power of two up to one tile, then tile multiples
+    whose count is a power of two (the bitonic network needs pow2 total)."""
+    m = 1
+    while m < max(n, 1):
+        m *= 2
+    return m
+
+
+def pad_lanes(hi: jax.Array, lo: jax.Array, m: int):
+    """Pad both key lanes to ``m`` with their dtype max (sorts to the tail)."""
+    n = hi.shape[0]
+    if m == n:
+        return hi, lo
+    hi = jnp.concatenate([hi, jnp.full(m - n, _type_max(hi.dtype), hi.dtype)])
+    lo = jnp.concatenate([lo, jnp.full(m - n, _type_max(lo.dtype), lo.dtype)])
+    return hi, lo
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_lex_pallas(hi: jax.Array, lo: jax.Array, *, tile: int = SORT_TILE,
+                    interpret: bool | None = None):
     """Stable lexicographic sort by (hi, lo); ties broken by row index.
 
     Returns ``(hi_sorted, lo_sorted, perm)`` where ``perm`` is the int32
     permutation (``hi_sorted == hi[perm]``).  Length is padded to the next
     power of two with both key lanes at their dtype max, so padding lands
-    at the tail and ``perm[:n]`` is a permutation of ``range(n)``.
+    at the tail and ``perm[:n]`` is a permutation of ``range(n)``.  Inputs
+    beyond ``tile`` rows run the multi-tile network: VMEM stays bounded by
+    the tile size (two tiles per cross-stage launch) instead of the whole
+    padded input.
     """
+    if interpret is None:
+        interpret = default_interpret()
+    if tile & (tile - 1):
+        raise ValueError(f"tile must be a power of two, got {tile}")
     n = hi.shape[0]
-    m = 1
-    while m < max(n, 1):
-        m *= 2
+    m = padded_length(n, tile)
+    hi, lo = pad_lanes(hi, lo, m)
     iota = jnp.arange(m, dtype=jnp.int32)
-    if m != n:
-        hi = jnp.concatenate([hi, jnp.full(m - n, _type_max(hi.dtype),
-                                           hi.dtype)])
-        lo = jnp.concatenate([lo, jnp.full(m - n, _type_max(lo.dtype),
-                                           lo.dtype)])
-    ho, lo_out, perm = pl.pallas_call(
-        functools.partial(_kernel, length=m),
-        grid=(1,),
-        in_specs=[pl.BlockSpec((m,), lambda i: (0,)),
-                  pl.BlockSpec((m,), lambda i: (0,)),
-                  pl.BlockSpec((m,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((m,), lambda i: (0,)),
-                   pl.BlockSpec((m,), lambda i: (0,)),
-                   pl.BlockSpec((m,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((m,), hi.dtype),
-                   jax.ShapeDtypeStruct((m,), lo.dtype),
-                   jax.ShapeDtypeStruct((m,), jnp.int32)],
-        interpret=interpret,
-    )(hi, lo, iota)
+    ho, lo_out, perm = sorted_lanes(hi, lo, iota, tile=tile,
+                                    interpret=interpret)
     return ho[:n], lo_out[:n], perm[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sort_kv32(keys: jax.Array, payload: jax.Array, *,
-              interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_kv32(keys: jax.Array, payload: jax.Array, *, tile: int = SORT_TILE,
+              interpret: bool | None = None):
     """Sort uint32/int32 ``keys`` ascending (stable), permuting ``payload``.
 
     Back-compat single-key entry point over the lexicographic network.
     """
     ko, _, perm = sort_lex_pallas(keys, jnp.zeros_like(keys, jnp.int32),
-                                  interpret=interpret)
+                                  tile=tile, interpret=interpret)
     return ko, jnp.take(payload, perm, axis=0)

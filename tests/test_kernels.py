@@ -5,9 +5,13 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.segment_reduce import segment_reduce_mxu, segment_reduce_ref
+from repro.kernels.ref import sort_lex_ref
+from repro.kernels.segment_reduce import (
+    segment_minmax_mxu, segment_minmax_ref, segment_reduce_mxu,
+    segment_reduce_ref, segment_sum_counts_mxu, segment_sum_mxu,
+)
 from repro.kernels.flash_attention import flash_attention, mha_ref
-from repro.kernels.sort_u32 import sort_kv32, sort_kv32_ref
+from repro.kernels.sort_u32 import sort_kv32, sort_kv32_ref, sort_lex_pallas
 from repro.kernels.spmv_ell import spmv_ell, spmv_ell_ref
 
 
@@ -66,6 +70,229 @@ class TestSort:
         np.testing.assert_array_equal(
             np.asarray(keys)[np.asarray(gp)], np.asarray(gk))
         assert sorted(np.asarray(gp).tolist()) == list(range(n))
+
+
+class TestSortMultiTile:
+    """The cross-tile bitonic merge: sizes straddling every tile boundary.
+
+    ``tile=64`` keeps the multi-tile machinery cheap in interpret mode
+    while exercising the same code path the default SORT_TILE takes for
+    inputs past one VMEM tile.
+    """
+
+    TILE = 64
+
+    @pytest.mark.parametrize("n", [0, 1, 63, 64, 65, 127, 128, 129,
+                                   200, 256, 515, 1024])
+    def test_boundary_sweep(self, n):
+        rng = np.random.default_rng(n + 17)
+        hi = jnp.asarray(rng.integers(0, max(n // 2, 2), n), jnp.int32)
+        lo = jnp.asarray(rng.integers(0, 7, n), jnp.int32)
+        gh, gl, gp = sort_lex_pallas(hi, lo, tile=self.TILE)
+        wh, wl, wp = sort_lex_ref(hi, lo)
+        np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+        np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+        # stability: with the unique index lane the permutation is unique,
+        # so it must match the stable oracle exactly
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+    def test_all_equal_keys_stability(self):
+        n = 5 * self.TILE              # non-pow2 count of tiles
+        hi = jnp.zeros(n, jnp.int32)
+        lo = jnp.zeros(n, jnp.int32)
+        _, _, perm = sort_lex_pallas(hi, lo, tile=self.TILE)
+        np.testing.assert_array_equal(np.asarray(perm), np.arange(n))
+
+    def test_vmem_bounded_padding(self):
+        # a few tiles + 1 row must pad to the next tile multiple of the
+        # network, not to the next power of two of a single giant tile
+        n = 4 * self.TILE + 1
+        rng = np.random.default_rng(0)
+        hi = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        lo = jnp.zeros(n, jnp.int32)
+        gh, _, gp = sort_lex_pallas(hi, lo, tile=self.TILE)
+        assert gh.shape == (n,)
+        assert sorted(np.asarray(gp).tolist()) == list(range(n))
+
+    def test_matches_default_tile(self):
+        n = 300
+        rng = np.random.default_rng(3)
+        hi = jnp.asarray(rng.integers(0, 40, n), jnp.int32)
+        lo = jnp.asarray(rng.integers(0, 5, n), jnp.int32)
+        small = sort_lex_pallas(hi, lo, tile=self.TILE)
+        big = sort_lex_pallas(hi, lo)          # single-tile path
+        for a, b in zip(small, big):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestSegmentReduceEdgeCases:
+    """n=0 / num_segments=0 must return empty results, not crash."""
+
+    def test_empty_rows(self):
+        seg = jnp.zeros(0, jnp.int32)
+        vals = jnp.zeros((0, 4), jnp.float32)
+        out = segment_sum_mxu(seg, vals, 8)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((8, 4)))
+        acc, cnt = segment_sum_counts_mxu(seg, vals, 8)
+        np.testing.assert_array_equal(np.asarray(cnt), np.zeros(8, np.int32))
+        mn = segment_minmax_mxu("min", seg, vals, 8)
+        assert np.all(np.asarray(mn) == np.inf)
+
+    def test_zero_segments(self):
+        rng = np.random.default_rng(1)
+        seg = jnp.asarray(rng.integers(0, 4, 32), jnp.int32)
+        vals = jnp.asarray(rng.normal(0, 1, (32, 3)), jnp.float32)
+        assert segment_sum_mxu(seg, vals, 0).shape == (0, 3)
+        acc, cnt = segment_sum_counts_mxu(seg, vals, 0)
+        assert acc.shape == (0, 3) and cnt.shape == (0,)
+        assert segment_minmax_mxu("max", seg, vals, 0).shape == (0, 3)
+
+    def test_empty_both_backends_via_dispatcher(self):
+        from repro.kernels import ops
+        vals = {"v": jnp.zeros((0, 2), jnp.float32)}
+        for bk in ("xla", "pallas"):
+            acc, cnt = ops.segment_reduce("sum", jnp.zeros(0, jnp.int32),
+                                          vals, jnp.zeros(0, bool), 4,
+                                          backend=bk)
+            np.testing.assert_array_equal(np.asarray(acc["v"]),
+                                          np.zeros((4, 2)))
+            np.testing.assert_array_equal(np.asarray(cnt),
+                                          np.zeros(4, np.int32))
+
+
+class TestSegmentMinMaxSublane:
+    """The scatter-free sublane min/max against the jnp oracle."""
+
+    @pytest.mark.parametrize("n,d,k", [(7, 3, 5), (256, 8, 64),
+                                       (1000, 16, 300), (513, 4, 129)])
+    @pytest.mark.parametrize("kind", ["min", "max"])
+    def test_sweep(self, n, d, k, kind):
+        rng = np.random.default_rng(n * 31 + d)
+        seg = jnp.asarray(rng.integers(0, k + 2, n), jnp.int32)
+        vals = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+        got = segment_minmax_mxu(kind, seg, vals, k, rows=64, kblk=64)
+        want = segment_minmax_ref(kind, seg, vals, k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("kind", ["min", "max"])
+    def test_int32(self, kind):
+        rng = np.random.default_rng(5)
+        seg = jnp.asarray(rng.integers(0, 9, 100), jnp.int32)
+        vals = jnp.asarray(rng.integers(-50, 50, (100, 2)), jnp.int32)
+        got = segment_minmax_mxu(kind, seg, vals, 9)
+        want = segment_minmax_ref(kind, seg, vals, 9)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_counts_ride_sum_launch(self):
+        rng = np.random.default_rng(2)
+        n, d, k = 300, 4, 32
+        seg = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+        vals = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+        acc, cnt = segment_sum_counts_mxu(seg, vals, k)
+        np.testing.assert_array_equal(np.asarray(acc),
+                                      np.asarray(segment_reduce_ref(seg, vals, k)))
+        np.testing.assert_array_equal(
+            np.asarray(cnt), np.bincount(np.asarray(seg), minlength=k)[:k])
+
+
+class TestFusedShuffleReduce:
+    """kernels.fused vs the composed path: bitwise on integer-valued data.
+
+    The composed xla path is the reference; the fused kernel must agree on
+    every output (sorted lanes, permutation, live mask, accumulators,
+    counts) at sizes straddling the fused tile boundary.
+    """
+
+    @staticmethod
+    def _case(n, nkeys, d, seed):
+        rng = np.random.default_rng(seed)
+        k2 = rng.integers(0, nkeys, n).astype(np.int32)
+        mk = rng.integers(0, 40, n).astype(np.int32)
+        # integer-valued floats: sums are exact, parity is bitwise
+        vals = rng.integers(-20, 20, (n, d)).astype(np.float32)
+        valid = rng.random(n) < 0.9
+        sign = np.where(rng.random(n) < 0.75, 1, -1).astype(np.int8)
+        aff = np.unique(k2[valid])
+        cap = 1 << max(int(np.ceil(np.log2(max(aff.size, 1)))), 3)
+        keys = np.full(cap, 2**31 - 1, np.int32)
+        keys[:aff.size] = aff
+        return tuple(jnp.asarray(a) for a in (k2, mk, vals, valid, sign,
+                                              keys))
+
+    class _Sum:
+        kind = "sum"
+
+    @pytest.mark.parametrize("n", [5, 100, 513, 1000])
+    def test_fused_vs_xla_bitwise(self, n):
+        from repro.kernels import ops
+        args = self._case(n, max(n // 4, 2), 3, n)
+        ref = ops.shuffle_reduce(self._Sum(), *args, backend="xla")
+        got = ops.shuffle_reduce(self._Sum(), *args, backend="pallas")
+        for name in ("k2", "mk", "live", "perm", "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)),
+                np.asarray(getattr(ref, name)), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(got.acc),
+                                      np.asarray(ref.acc))
+        np.testing.assert_array_equal(np.asarray(got.values),
+                                      np.asarray(ref.values))
+
+    @pytest.mark.parametrize("n", [255, 256, 257, 515, 1024])
+    def test_multitile_fused(self, n):
+        """Small fused tile: the multi-tile sort + fused LWW/reduce pass."""
+        from repro.kernels import ops
+        from repro.kernels.fused import fused_shuffle_reduce
+        k2, mk, vals, valid, sign, keys = self._case(n, max(n // 3, 2), 2,
+                                                     n + 99)
+        k2m = jnp.where(valid, k2, jnp.int32(2**31 - 1))
+        out = fused_shuffle_reduce(k2m, mk, vals, valid, sign, keys,
+                                   out_dtype=jnp.float32, tile=128, kblk=64)
+        ref = ops.shuffle_reduce(self._Sum(), k2, mk, vals, valid, sign,
+                                 keys, backend="xla")
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref.k2))
+        np.testing.assert_array_equal(np.asarray(out[3]),
+                                      np.asarray(ref.live))
+        np.testing.assert_array_equal(np.asarray(out[4]),
+                                      np.asarray(ref.perm))
+        np.testing.assert_array_equal(np.asarray(out[5]), np.asarray(ref.acc))
+        np.testing.assert_array_equal(np.asarray(out[6]),
+                                      np.asarray(ref.counts))
+
+    def test_stability_witness(self):
+        """Duplicate (k2, mk) rows: the *last* writer must win through the
+        multi-tile fused path (the engine's tombstone semantics)."""
+        from repro.kernels.fused import fused_shuffle_reduce
+        n, reps = 384, 3
+        k2 = jnp.asarray(np.repeat(np.arange(n // reps, dtype=np.int32),
+                                   reps))
+        mk = jnp.zeros(n, jnp.int32)
+        vals = jnp.asarray(np.arange(n, dtype=np.float32)[:, None])
+        valid = jnp.ones(n, bool)
+        sign = jnp.ones(n, np.int8)
+        keys = jnp.asarray(np.arange(128, dtype=np.int32))
+        out = fused_shuffle_reduce(k2, mk, vals, valid, sign, keys,
+                                   out_dtype=jnp.float32, tile=128, kblk=128)
+        live = np.asarray(out[3])
+        v_s = np.asarray(out[2])[:, 0]
+        # exactly one live row per key, and it is the last-arriving copy
+        assert live.sum() == n // reps
+        np.testing.assert_array_equal(
+            v_s[live], np.arange(reps - 1, n, reps, dtype=np.float32))
+
+    def test_tombstone_delete(self):
+        from repro.kernels import ops
+        k2 = jnp.asarray([3, 3, 5], jnp.int32)
+        mk = jnp.asarray([0, 0, 0], jnp.int32)
+        vals = jnp.asarray([[1.0], [2.0], [7.0]])
+        valid = jnp.ones(3, bool)
+        sign = jnp.asarray([1, -1, 1], jnp.int8)   # 3 deleted by tombstone
+        keys = jnp.asarray([3, 5] + [2**31 - 1] * 6, jnp.int32)
+        for bk in ("xla", "pallas"):
+            sr = ops.shuffle_reduce(self._Sum(), k2, mk, vals, valid, sign,
+                                    keys, backend=bk)
+            counts = np.asarray(sr.counts)
+            assert counts[0] == 0 and counts[1] == 1
+            assert np.asarray(sr.acc)[1, 0] == 7.0
 
 
 class TestSpmv:
