@@ -1,0 +1,197 @@
+"""Serving-tier benchmark: batched vs sequential cross-tenant refresh,
+plus SLO behavior under overload.
+
+Two kinds of cells, per backend:
+
+  * ``tenants_N``  — closed-loop fleets of N small wordcount tenants,
+    one update per tenant per round.  ``batched`` runs the tier's
+    cross-tenant batched refresh (one kernel launch per compatible
+    group); ``sequential`` forces the per-tenant path
+    (``batch_refresh=False`` — the old MultiSessionServer behavior).
+    The headline is the updates/sec ratio: past ~100 tenants the
+    per-tenant path is dispatch-bound and batching must win.
+  * ``overload``   — one latency-class tenant (p95 target) in a fleet of
+    best-effort tenants, driven open-loop at 2x the tier's measured
+    capacity.  Admission control must shed best-effort submits while the
+    latency tenant's p95 holds.  xla only: interpret-mode pallas launch
+    granularity is seconds, so no latency target there is meaningful.
+
+Results land in ``BENCH_serve.json``:
+
+    PYTHONPATH=src:. python benchmarks/serve_load.py                # full
+    PYTHONPATH=src:. python benchmarks/serve_load.py --tiny         # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve import ServeTier, SLOClass
+from repro.serve import loadgen
+
+
+def throughput_cell(backend: str, n_tenants: int, rounds: int,
+                    cache_dir: str | None) -> dict:
+    cell = {}
+    for mode in ("batched", "sequential"):
+        tier = ServeTier(batch_refresh=(mode == "batched"))
+        mirrors = loadgen.make_fleet(tier, n_tenants, backend=backend,
+                                     cache_dir=cache_dir, seed=n_tenants)
+        # two warm rounds: the affected-key bucket (key_cap) can differ
+        # between rounds, so one round leaves compiles in the measurement
+        loadgen.run_rounds(tier, mirrors, 2)
+        res = loadgen.run_rounds(tier, mirrors, rounds, seed=9)
+        stats = tier.stats()
+        res["batched_launches"] = stats["batched_launches"]
+        res["batched_refreshes"] = stats["batched_refreshes"]
+        res["latency_p95_ms_median"] = float(np.median(
+            [t["latency_p95_ms"] for t in stats["tenants"].values()]))
+        cell[mode] = res
+        emit(f"serve.{backend}.tenants_{n_tenants}.{mode}.updates_per_sec",
+             res["updates_per_sec"],
+             f"wall={res['wall_s']:.2f}s,"
+             f"batched_launches={res['batched_launches']}")
+    cell["speedup"] = (cell["batched"]["updates_per_sec"]
+                       / max(cell["sequential"]["updates_per_sec"], 1e-9))
+    emit(f"serve.{backend}.tenants_{n_tenants}.speedup", cell["speedup"],
+         "batched vs sequential updates/sec")
+    return cell
+
+
+def overload_cell(backend: str, n_best_effort: int, duration_s: float,
+                  cache_dir: str | None) -> dict:
+    def slo_of(i: int) -> SLOClass:
+        if i == 0:
+            return SLOClass.latency(target_p95_ms=500.0, deadline_ms=500.0)
+        return SLOClass.best_effort()
+
+    tier = ServeTier()
+    # the latency tenant refreshes solo (its own batch group): its p95
+    # must not ride the best-effort herd's group-size bucket ladder.
+    # Best-effort records are wide (many row-pairs of long documents) so
+    # the refresh engine — not the Python submit loop — is what
+    # saturates: per-row refresh cost scales with doc_len while the
+    # submit path stays one cheap array copy.
+    rows_per_update = 8
+    vocab = 512
+    n_docs, doc_len = 64, 128
+    mirrors = loadgen.make_fleet(
+        tier, n_best_effort + 1, backend=backend, cache_dir=cache_dir,
+        seed=7, n_docs=n_docs, doc_len=doc_len, vocab=vocab, slo_of=slo_of,
+        group_of=lambda i: "latency" if i == 0 else None)
+    latency_tenant = "t0000"
+    with tier:                                        # scheduler thread on
+        loadgen.run_rounds(tier, mirrors, 2,          # warm / compile rounds
+                           vocab=vocab, rows_per_update=rows_per_update)
+        # first open-loop burst still compiles the full-batch coalesce
+        # buckets; the second one is the honest saturation rate
+        loadgen.open_loop_rate(tier, mirrors,
+                               updates=8 * (n_best_effort + 1),
+                               vocab=vocab, rows_per_update=rows_per_update)
+        capacity = loadgen.open_loop_rate(
+            tier, mirrors, updates=8 * (n_best_effort + 1), seed=4,
+            vocab=vocab, rows_per_update=rows_per_update)
+        # backend-calibrated SLO: a p95 target below one refresh is
+        # unachievable by construction (pallas interpret mode is orders
+        # of magnitude slower per launch than compiled xla), so target
+        # 10x the latency tenant's own median refresh, floored at the
+        # headline 500ms.  The trickle rate is scaled the same way so the
+        # latency tenant measures herd interference, not self-overload.
+        ref_p95_s = tier[latency_tenant].metrics.refresh_pct(50)
+        target_p95_ms = max(500.0, 1e4 * ref_p95_s)
+        tier.handle(latency_tenant).slo = SLOClass.latency(
+            target_p95_ms=target_p95_ms, deadline_ms=target_p95_ms)
+        # reset breach/shed/latency accounting accumulated during
+        # calibration — the SLO verdict is about the overload window only
+        for h in tier.handles.values():
+            h.reset_window()
+        res = loadgen.overload_run(
+            tier, mirrors, latency_tenant=latency_tenant,
+            duration_s=duration_s, offered_per_sec=2.0 * capacity,
+            latency_interval_s=max(0.05, 2.0 * ref_p95_s),
+            vocab=vocab, rows_per_update=rows_per_update)
+    stats = tier.stats()
+    lat = stats["classes"][latency_tenant]
+    out = {
+        "capacity_updates_per_sec": capacity,
+        "offered_updates_per_sec": 2.0 * capacity,
+        **res,
+        "latency_tenant": {
+            "target_p95_ms": target_p95_ms,
+            # windowed (overload-only) p95 from the tier-side reservoir,
+            # not the session-lifetime StreamMetrics percentile, which
+            # still holds the calibration bursts
+            "latency_p95_ms": lat["latency_p95_ms"],
+            "breach_rate": lat["breach_rate"],
+            "refreshes": lat["observed"],
+        },
+        "best_effort": {
+            "shed_submits": sum(c["shed_submits"]
+                                for c in stats["classes"].values()),
+            "shed_rows": sum(c["shed_rows"]
+                             for c in stats["classes"].values()),
+        },
+    }
+    emit(f"serve.{backend}.overload.latency_p95_ms",
+         lat["latency_p95_ms"],
+         f"target={target_p95_ms}ms,breach_rate={lat['breach_rate']:.3f}")
+    emit(f"serve.{backend}.overload.shed_fraction", res["shed_fraction"],
+         f"offered={res['offered']},admitted={res['admitted']}")
+    return out
+
+
+def run_backend(backend: str, tiny: bool, cache_dir: str | None) -> dict:
+    out = {}
+    sizes = (10,) if tiny else (10, 100, 1000)
+    rounds = 2 if tiny else 3
+    for n in sizes:
+        out[f"tenants_{n}"] = throughput_cell(backend, n, rounds, cache_dir)
+    if backend == "xla":
+        out["overload"] = overload_cell(
+            backend, n_best_effort=6 if tiny else 32,
+            duration_s=3.0 if tiny else 15.0, cache_dir=cache_dir)
+    else:
+        # the SLO verdict needs a latency-representative backend: in
+        # pallas interpret mode a single best-effort batched launch — the
+        # unit preemption cannot split — takes seconds, so no sub-second
+        # p95 target is achievable by construction
+        out["overload"] = {"skipped":
+                           "pallas interpret-mode launch granularity "
+                           "exceeds any latency-representative p95 target"}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "both"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_serve.json here")
+    ap.add_argument("--cache-dir", default=".jax_cache",
+                    help="persistent XLA executable cache directory "
+                         "('' disables)")
+    args = ap.parse_args()
+
+    backends = (("xla", "pallas") if args.backend == "both"
+                else (args.backend,))
+    results = {"platform": jax.default_backend(),
+               "note": "CPU wall-clock; pallas runs in interpret mode off-TPU",
+               "tiny": args.tiny, "backends": {}}
+    for bk in backends:
+        results["backends"][bk] = run_backend(bk, args.tiny,
+                                              args.cache_dir or None)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,11 +12,8 @@ dataclass consumed by :class:`repro.api.Session`.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass
-from typing import Any, Optional, Union
-
-from jax.sharding import Mesh
+from typing import Any, Optional
 
 from repro.core.mrbg_store import (
     DEFAULT_CACHE, DEFAULT_FIX_WINDOW, DEFAULT_GAP_T, POLICIES,
@@ -30,9 +27,10 @@ REFRESH_MODES = ("fine", "warm")
 class MeshConfig:
     """Validated distributed-execution knobs (§4.3), one object per mesh.
 
-    ``RunConfig(mesh=MeshConfig(mesh, ...))`` replaces the historical flat
-    knobs (``mesh_axis``/``pod_axis``/``shuffle_cap``/``partition_cap`` on
-    RunConfig), which remain as deprecation-warning aliases for one release.
+    ``RunConfig(mesh=MeshConfig(mesh, ...))`` is the only spelling; the
+    historical flat knobs (``mesh_axis``/``pod_axis``/``shuffle_cap``/
+    ``partition_cap`` on RunConfig) were deprecated for one release and
+    have been removed.
     """
 
     # the jax.sharding.Mesh; duck-typed (anything exposing .shape works,
@@ -97,9 +95,6 @@ class MeshConfig:
         return dataclasses.replace(self, **kw)
 
 
-_FLAT_MESH_KNOBS = ("mesh_axis", "pod_axis", "shuffle_cap", "partition_cap")
-
-
 @dataclass(frozen=True)
 class RunConfig:
     # -- shuffle/reduce backend (repro.kernels.ops): 'xla' | 'pallas' |
@@ -133,14 +128,8 @@ class RunConfig:
     plain_shuffle: bool = False
 
     # -- distributed execution: a MeshConfig turns the same spec into the
-    #    shard_map + all_to_all engine (§4.3); no separate entry point.
-    #    Passing a bare Mesh (optionally with the flat knobs below) is the
-    #    deprecated pre-MeshConfig spelling, normalized with a warning.
-    mesh: Optional[Union[Mesh, MeshConfig]] = None
-    mesh_axis: Optional[str] = None              # deprecated -> MeshConfig.axis
-    pod_axis: Optional[str] = None               # deprecated -> MeshConfig
-    shuffle_cap: Optional[int] = None            # deprecated -> MeshConfig
-    partition_cap: Optional[int] = None          # deprecated -> MeshConfig
+    #    shard_map + all_to_all engine (§4.3); no separate entry point
+    mesh: Optional[MeshConfig] = None
 
     # -- checkpointing (§6): directory + cadence in epochs (0 = manual via
     #    Session.checkpoint only)
@@ -173,33 +162,13 @@ class RunConfig:
                              "Session._finish keeps the newest reports)")
         if self.delta_bucket_min < 1:
             raise ValueError("delta_bucket_min must be >= 1")
-        self._normalize_mesh()
-
-    def _normalize_mesh(self) -> None:
-        """Fold the deprecated flat mesh knobs into one MeshConfig."""
-        flat = {k: getattr(self, k) for k in _FLAT_MESH_KNOBS}
-        given = {k: v for k, v in flat.items() if v is not None}
-        if isinstance(self.mesh, MeshConfig):
-            if given:
-                raise ValueError(
-                    f"flat mesh knobs {tuple(given)} cannot be combined "
-                    f"with RunConfig(mesh=MeshConfig(...)); set them on "
-                    f"the MeshConfig instead")
-        elif self.mesh is not None:
-            warnings.warn(
-                "RunConfig(mesh=<Mesh>, mesh_axis=..., pod_axis=..., "
-                "shuffle_cap=..., partition_cap=...) is deprecated; pass "
-                "RunConfig(mesh=MeshConfig(mesh, axis=..., ...)) instead "
-                "(see the README migration table)",
-                DeprecationWarning, stacklevel=4)
-            kw = {"axis": given.pop("mesh_axis", None) or "data"}
-            kw.update(given)
-            object.__setattr__(self, "mesh", MeshConfig(self.mesh, **kw))
-        elif given:
-            raise ValueError(f"mesh knobs {tuple(given)} given without a "
-                             f"mesh")
-        for k in _FLAT_MESH_KNOBS:       # normalized away; replace()-stable
-            object.__setattr__(self, k, None)
+        if self.mesh is not None and not isinstance(self.mesh, MeshConfig):
+            raise TypeError(
+                "RunConfig(mesh=...) takes a MeshConfig; the pre-PR-7 flat "
+                "spelling (bare Mesh + mesh_axis/pod_axis/shuffle_cap/"
+                "partition_cap) was removed — pass "
+                "RunConfig(mesh=MeshConfig(mesh, axis=..., ...)) "
+                "(see the README migration table)")
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
@@ -248,6 +217,16 @@ class StreamConfig:
     #    engine sees them (False streams raw rows through)
     coalesce: bool = True
 
+    # -- input-mirror growth: streams may insert record ids past the seed
+    #    data's capacity; the mirror (and every driver-side record
+    #    structure) then grows geometrically up the power-of-two ladder.
+    #    ``grow_records=False`` restores the historical hard rejection at
+    #    the seed capacity; ``max_records`` bounds growth (ids at or past
+    #    it are rejected at ingest) so a corrupt id cannot allocate the
+    #    whole address space
+    grow_records: bool = True
+    max_records: Optional[int] = None
+
     # -- refresh scheduling
     policy: str = "paper"              # latency | throughput | paper
     crossover: float = 0.25            # |Δ|/|D| where full recompute wins
@@ -271,6 +250,8 @@ class StreamConfig:
         if self.queue_capacity < 1 or self.max_batch_records < 1:
             raise ValueError("queue_capacity and max_batch_records must "
                              "be >= 1")
+        if self.max_records is not None and self.max_records < 1:
+            raise ValueError("max_records must be >= 1 (or None)")
 
     def replace(self, **kw) -> "StreamConfig":
         return dataclasses.replace(self, **kw)

@@ -127,6 +127,35 @@ class Session:
         self.epoch += 1
         return self._finish(t0)
 
+    def grow_records(self, capacity: int) -> None:
+        """Extend the record-id address space to ``capacity`` rows.
+
+        Streaming sources may insert brand-new record ids past the seed
+        data's capacity; drivers that mirror the structure file
+        (iterative / plain / distributed-iterative) extend their mirrors
+        with invalid rows and rebuild derived indexes.  One-step drivers
+        keep no per-record structure — record ids only feed the MK lane —
+        so this is a no-op for them.  Shrinking is never performed.
+        """
+        hook = getattr(self._driver, "grow_records", None)
+        if hook is not None:
+            hook(int(capacity))
+
+    def absorb_refresh(self, seconds: float) -> RunReport:
+        """Account one refresh epoch executed *outside* ``update()``.
+
+        The serving tier's batched cross-tenant refresh drives several
+        sessions' preserved state through one shared kernel launch; each
+        participant then calls this with its share of the batch wall-clock
+        so ``epoch``/``history``/auto-checkpointing stay consistent with
+        the per-tenant path.
+        """
+        if self.epoch < 0:
+            raise RuntimeError("absorb_refresh() before run(); execute the "
+                               "initial job first")
+        self.epoch += 1
+        return self._finish(time.perf_counter() - seconds)
+
     def _finish(self, t0: float) -> RunReport:
         # skip the dense result copy here: each epoch would otherwise pay
         # an O(|D|) device->host transfer even when nobody reads it
@@ -243,6 +272,21 @@ class Session:
 # ---------------------------------------------------------------------------
 # Drivers: one per engine path; each owns the preserved state
 # ---------------------------------------------------------------------------
+
+def _grow_mirror(drv, capacity: int) -> None:
+    """Extend a driver's host structure mirror (``_keys``/``_values``/
+    ``_valid``) with invalid rows up to ``capacity``."""
+    capacity = int(capacity)
+    n = drv._keys.shape[0]
+    if capacity <= n:
+        return
+    pad = capacity - n
+    drv._keys = np.concatenate(
+        [drv._keys, np.zeros((pad,) + drv._keys.shape[1:], drv._keys.dtype)])
+    drv._values = {
+        name: np.concatenate([a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+        for name, a in drv._values.items()}
+    drv._valid = np.concatenate([drv._valid, np.zeros(pad, bool)])
 
 class _OneStepMRBG:
     """run_onestep + MRBG-Store + incremental_onestep (§3.3/§3.4)."""
@@ -379,6 +423,10 @@ class _IncrIter:
         self._logs = hist.get("logs", [])
         self._max_change = []
 
+    def grow_records(self, capacity: int) -> None:
+        if self.job is not None:
+            self.job.grow_records(capacity)
+
     def result(self) -> Dict[str, np.ndarray]:
         return self.job.state.to_host()
 
@@ -436,6 +484,9 @@ class _PlainIter:
         apply_delta_host(self._keys, self._values, self._valid, delta)
         # vanilla MR: recompute everything (under the refresh budget)
         self._converge(self.cfg.refresh_iters_, self.cfg.refresh_tol_)
+
+    def grow_records(self, capacity: int) -> None:
+        _grow_mirror(self, capacity)
 
     def result(self) -> Dict[str, np.ndarray]:
         return self.state.to_host()
@@ -592,6 +643,12 @@ class _Distributed:
             self._restore(snap)           # never leave the session diverged
             raise
         self.mode = "distributed-warm" if fell_back else "distributed-i2"
+
+    def grow_records(self, capacity: int) -> None:
+        n = self._keys.shape[0]
+        _grow_mirror(self, capacity)
+        if self._keys.shape[0] != n:
+            self._rebuild_rev()
 
     def _snapshot(self):
         return (self._keys.copy(),

@@ -130,6 +130,28 @@ class IncrIterJob:
             self.spec.project, self.struct_keys, self.struct_valid,
             self.spec.num_state)
 
+    def grow_records(self, capacity: int) -> None:
+        """Extend the structure mirror with invalid rows (streams inserting
+        brand-new record ids past the seed capacity) and rebuild the
+        reverse dependency index.  Shrinking is never performed."""
+        capacity = int(capacity)
+        n = self.struct_keys.shape[0]
+        if capacity <= n:
+            return
+        pad = capacity - n
+        self.struct_keys = np.concatenate(
+            [self.struct_keys,
+             np.zeros((pad,) + self.struct_keys.shape[1:],
+                      self.struct_keys.dtype)])
+        self.struct_values = {
+            name: np.concatenate(
+                [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+            for name, a in self.struct_values.items()}
+        self.struct_valid = np.concatenate(
+            [self.struct_valid, np.zeros(pad, bool)])
+        self.capacity = capacity
+        self._rebuild_reverse_index()
+
     def _records_of_dks(self, dks: np.ndarray) -> np.ndarray:
         if self.spec.replicate_state:
             return np.nonzero(self.struct_valid)[0].astype(np.int32)

@@ -117,6 +117,21 @@ class MRBGStore:
         s.live_records = self.live_records
         return s
 
+    def clear(self) -> None:
+        """Drop every batch and index entry in place.
+
+        The serving tier spills a cold tenant's store to disk
+        (:func:`store_blobs`/:func:`store_meta`), clears it to release the
+        memory, and later repopulates the *same* object with
+        :func:`load_store_state` — a bit-for-bit round trip.
+        """
+        self.batches = []
+        self.idx_batch[:] = -1
+        self.idx_start[:] = 0
+        self.idx_len[:] = 0
+        self.file_records = 0
+        self.live_records = 0
+
     # -- ingestion --------------------------------------------------------
     def append(self, k2: np.ndarray, mk: np.ndarray, v2: Dict[str, np.ndarray],
                sign: Optional[np.ndarray] = None) -> None:

@@ -1,0 +1,27 @@
+"""repro.serve — SLO-aware multi-tenant serving tier.
+
+The serving entry point for fleets of incremental tenants: per-tenant
+SLO classes with deadline-slack scheduling, admission control that sheds
+best-effort work under overload, batched cross-tenant refresh (many
+small tenants, one kernel launch), and cold-store spill to disk under a
+shared memory budget.  Replaces ``repro.stream.MultiSessionServer``
+(kept as a deprecated shim for one release).
+"""
+from repro.serve.admission import AdmissionController
+from repro.serve.sched import (BEST_EFFORT, LATENCY, THROUGHPUT, SLOClass,
+                               deadline_slack, order_by_priority)
+from repro.serve.spill import SpillManager
+from repro.serve.tier import ServeTier, TenantHandle
+
+__all__ = [
+    "AdmissionController",
+    "BEST_EFFORT",
+    "LATENCY",
+    "THROUGHPUT",
+    "SLOClass",
+    "SpillManager",
+    "ServeTier",
+    "TenantHandle",
+    "deadline_slack",
+    "order_by_priority",
+]

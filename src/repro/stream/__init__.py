@@ -34,8 +34,7 @@ from repro.api.config import STREAM_POLICIES, StreamConfig
 from repro.stream.coalesce import CoalesceResult, coalesce, coalesce_rows
 from repro.stream.metrics import StreamMetrics
 from repro.stream.scheduler import RefreshDecision, RefreshScheduler
-from repro.stream.server import MultiSessionServer
-from repro.stream.session import StreamSession
+from repro.stream.session import PreparedBatch, StreamSession
 from repro.stream.source import (
     DeltaRecord, DeltaSource, FileTailSource, QueueSource, SyntheticSource,
 )
@@ -46,5 +45,15 @@ __all__ = [
     "SyntheticSource",
     "CoalesceResult", "coalesce", "coalesce_rows",
     "RefreshScheduler", "RefreshDecision",
-    "StreamSession", "MultiSessionServer", "StreamMetrics",
+    "StreamSession", "PreparedBatch", "MultiSessionServer",
+    "StreamMetrics",
 ]
+
+
+def __getattr__(name):
+    # lazy: repro.stream.server shims onto repro.serve, which itself
+    # imports repro.stream.session — a cycle if resolved at package init
+    if name == "MultiSessionServer":
+        from repro.stream.server import MultiSessionServer
+        return MultiSessionServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

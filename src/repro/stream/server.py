@@ -1,168 +1,33 @@
-"""MultiSessionServer: many tenant StreamSessions in one process.
+"""MultiSessionServer — deprecated shim over :class:`repro.serve.ServeTier`.
 
-One scheduler thread round-robins the tenants' :meth:`StreamSession.step`
-quanta — the serving analogue of the paper's shared MapReduce cluster:
-every tenant keeps its own preserved job (Session, MRBG store, mirror),
-nothing is shared but compute and the host-memory byte budget.
+The round-robin multi-tenant server grew into a real serving tier with
+SLO classes, admission control, batched cross-tenant refresh, and
+cold-store spill; that code now lives in :mod:`repro.serve`.  This class
+keeps the old name and behavior (plain FIFO sweeps, per-tenant refresh,
+no spill) alive for one release so existing callers migrate on their own
+schedule:
 
-The budget covers the sum of all tenants' MRBG files ("local disk" in the
-paper's deployment).  When a sweep ends over budget the server compacts
-stores in obsolete-bytes order — reclaiming superseded chunk versions —
-until the total fits (or nothing reclaimable remains, which is reported
-in ``stats()`` as ``over_budget``).
+    server = MultiSessionServer(...)       # before
+    tier   = repro.serve.ServeTier(...)    # after (adds slo=/group= etc.)
 """
 from __future__ import annotations
 
-import threading
-import time
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
-from repro.kernels import jitcache
-from repro.stream.session import StreamSession
+from repro.serve.tier import ServeTier
 
 
-class MultiSessionServer:
-    """Time-slice tenant stream sessions over one engine process."""
+class MultiSessionServer(ServeTier):
+    """Deprecated: use :class:`repro.serve.ServeTier`."""
 
     def __init__(self, store_budget_bytes: Optional[int] = None,
                  poll_interval: float = 0.002):
-        self.store_budget_bytes = store_budget_bytes
-        self.poll_interval = poll_interval
-        self.tenants: Dict[str, StreamSession] = {}
-        self._stop_evt = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-        self._over_budget = False
-        self._sweeps = 0
-        self._error: Optional[BaseException] = None
-
-    # -- tenancy -----------------------------------------------------------
-    def add(self, tenant: StreamSession) -> StreamSession:
-        """Register a tenant; the server owns its scheduling from now on
-        (the tenant must not run its own worker thread).
-
-        Admission runs the tenant's initial job — and, when its
-        ``StreamConfig(prewarm=True)``, compiles its delta bucket ladder —
-        before the tenant enters the sweep, so a newly added tenant never
-        pays cold-compile latency out of the shared scheduler thread's
-        first quantum.
-        """
-        if tenant.name in self.tenants:
-            raise ValueError(f"tenant {tenant.name!r} already registered")
-        if tenant._thread is not None:
-            raise ValueError(f"tenant {tenant.name!r} already runs its own "
-                             f"worker; construct it unstarted")
-        tenant.start(background=False)     # initial run, no thread
-        tenant._managed = True             # this thread is its consumer now
-        self.tenants[tenant.name] = tenant
-        return tenant
-
-    def __getitem__(self, name: str) -> StreamSession:
-        return self.tenants[name]
-
-    # -- scheduling --------------------------------------------------------
-    def start(self) -> "MultiSessionServer":
-        if self._thread is None:
-            self._stop_evt.clear()
-            self._thread = threading.Thread(target=self._loop,
-                                            name="stream-server", daemon=True)
-            self._thread.start()
-        return self
-
-    def stop(self) -> None:
-        self._stop_evt.set()
-        if self._thread is not None:
-            self._thread.join(timeout=30)
-            self._thread = None
-
-    def __enter__(self) -> "MultiSessionServer":
-        return self.start()
-
-    def __exit__(self, *exc) -> None:
-        self.stop()
-
-    def sweep(self) -> bool:
-        """One round-robin pass: a step() quantum per tenant, then budget
-        enforcement.  Returns True if any tenant refreshed."""
-        progressed = False
-        for tenant in list(self.tenants.values()):
-            progressed |= tenant.step()
-        self._enforce_budget()
-        self._sweeps += 1
-        return progressed
-
-    def _loop(self) -> None:
-        while not self._stop_evt.is_set():
-            try:
-                if not self.sweep():
-                    time.sleep(self.poll_interval)
-            except BaseException as e:       # noqa: BLE001 — surfaced via
-                self._error = e              # _check_error on drain
-                return
-
-    def _check_error(self) -> None:
-        if self._error is not None:
-            raise RuntimeError("stream server scheduler thread died; the "
-                               "failing micro-batch was dropped"
-                               ) from self._error
-
-    # -- shared store budget ----------------------------------------------
-    def total_store_bytes(self) -> int:
-        return sum(t.store_bytes() for t in self.tenants.values())
-
-    def _enforce_budget(self) -> None:
-        if self.store_budget_bytes is None:
-            return
-        total = self.total_store_bytes()
-        if total <= self.store_budget_bytes:
-            self._over_budget = False
-            return
-        # compact fattest-obsolete first until the total fits
-        order = sorted(
-            self.tenants.values(),
-            key=lambda t: t.session.store_obsolete_bytes(),
-            reverse=True)
-        for tenant in order:
-            if total <= self.store_budget_bytes:
-                break
-            total -= tenant.compact_store()
-        self._over_budget = total > self.store_budget_bytes
-
-    # -- synchronization / outputs ----------------------------------------
-    def drain(self, timeout: float = 60.0) -> None:
-        """Flush and process everything buffered in every tenant."""
-        deadline = time.perf_counter() + timeout
-        for t in self.tenants.values():
-            t._flush = True
-        try:
-            while True:
-                self._check_error()
-                if self._thread is None:
-                    self.sweep()
-                if all(t.idle for t in self.tenants.values()):
-                    return
-                if time.perf_counter() > deadline:
-                    lag = {n: t._pending_rows + t._inbox.qsize()
-                           for n, t in self.tenants.items() if not t.idle}
-                    raise TimeoutError(f"server drain exceeded {timeout}s; "
-                                       f"lagging tenants: {lag}")
-                if self._thread is not None:
-                    time.sleep(self.poll_interval)
-        finally:
-            for t in self.tenants.values():
-                t._flush = False
-
-    def stats(self) -> Dict[str, object]:
-        tenants = {n: t.metrics.snapshot() for n, t in self.tenants.items()}
-        return {
-            "tenants": tenants,
-            "total_store_bytes": self.total_store_bytes(),
-            "store_budget_bytes": self.store_budget_bytes,
-            "over_budget": self._over_budget,
-            "sweeps": self._sweeps,
-            # process-wide latency-tail telemetry (shared jit caches)
-            "retrace_batches": sum(t["retrace_batches"]
-                                   for t in tenants.values()),
-            "rows_rejected": sum(t["rows_rejected"]
-                                 for t in tenants.values()),
-            "jit": jitcache.snapshot(),
-        }
+        warnings.warn(
+            "MultiSessionServer is deprecated; use repro.serve.ServeTier "
+            "(adds SLO classes, admission control, batched cross-tenant "
+            "refresh, and cold-store spill)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(store_budget_bytes=store_budget_bytes,
+                         poll_interval=poll_interval,
+                         batch_refresh=False)

@@ -17,8 +17,9 @@ import json
 import queue as queue_mod
 import threading
 import time
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +35,25 @@ from repro.stream.coalesce import (
 from repro.stream.metrics import StreamMetrics
 from repro.stream.scheduler import RefreshScheduler
 from repro.stream.source import DeltaRecord, DeltaSource
+
+
+@dataclass
+class PreparedBatch:
+    """One micro-batch after coalescing and mirror application, before the
+    refresh itself.  ``StreamSession._process_batch`` consumes these
+    in-place; the serving tier's batched cross-tenant path pulls them out
+    via :meth:`StreamSession.prepare_batch`, runs many tenants' refreshes
+    through one kernel launch, then calls ``commit_batch``/``rollback_batch``.
+    """
+
+    records: List[DeltaRecord]
+    first_arrival: float
+    epoch: int
+    n_in: int
+    res: CoalesceResult
+    rows: Optional[np.ndarray]       # mirror rows saved for rollback
+    saved: Optional[tuple]           # (keys, values, valid) at those rows
+    decision: Optional[Any]          # scheduler decision; None => noop
 
 
 class StreamSession:
@@ -70,6 +90,7 @@ class StreamSession:
         self._managed = False                # scheduled by a server
         self._error: Optional[BaseException] = None
         self._prewarmed = False
+        self.grow_events = 0                 # mirror-capacity doublings
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, background: bool = True) -> "StreamSession":
@@ -181,12 +202,47 @@ class StreamSession:
         if rid.size == 0:
             return
         lo, hi = int(rid.min()), int(rid.max())
-        if lo < 0 or hi >= self._mkeys.shape[0]:
-            bad = hi if hi >= self._mkeys.shape[0] else lo
+        if lo < 0:
             raise ValueError(
-                f"record id {bad} outside the input mirror capacity "
-                f"{self._mkeys.shape[0]}; grow the initial data's padding "
-                f"to stream inserts")
+                f"record id {lo} outside the input mirror capacity "
+                f"{self._mkeys.shape[0]}; record ids must be >= 0")
+        # with grow_records (the default) the mirror grows geometrically on
+        # overflow, so only a configured ceiling rejects inserts
+        if self.sconfig.grow_records:
+            limit = self.sconfig.max_records
+        else:
+            limit = self._mkeys.shape[0]
+        if limit is not None and hi >= limit:
+            hint = ("raise StreamConfig(max_records=...)"
+                    if self.sconfig.grow_records
+                    else "pass StreamConfig(grow_records=True) to stream "
+                         "inserts")
+            raise ValueError(
+                f"record id {hi} outside the input mirror capacity "
+                f"{limit}; {hint}")
+
+    def _grow_to(self, needed: int) -> None:
+        """Geometric input-mirror growth: extend the mirror (invalid rows)
+        and the session driver's record structures to the next power-of-two
+        capacity >= ``needed``.  Caller holds ``_lock``."""
+        cap = self._mkeys.shape[0]
+        if needed <= cap:
+            return
+        # next power of two >= max(needed, 2*cap): O(log) growth events
+        new_cap = next_bucket(max(needed, 2 * cap), 1)
+        if self.sconfig.max_records is not None:
+            new_cap = min(new_cap, self.sconfig.max_records)
+        pad = new_cap - cap
+        self._mkeys = np.concatenate(
+            [self._mkeys,
+             np.zeros((pad,) + self._mkeys.shape[1:], self._mkeys.dtype)])
+        self._mvalues = {
+            n: np.concatenate([a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+            for n, a in self._mvalues.items()}
+        self._mvalid = np.concatenate(
+            [self._mvalid, np.zeros(pad, bool)])
+        self.session.grow_records(new_cap)
+        self.grow_events += 1
 
     def _ingest(self) -> bool:
         """Move rows from the inbox and the source into the pending batch
@@ -256,7 +312,19 @@ class StreamSession:
                 f"stream worker for {self.name!r} died; the failing "
                 f"micro-batch was dropped") from self._error
 
-    def _process_batch(self) -> None:
+    def prepare_batch(self) -> Optional[PreparedBatch]:
+        """Assemble the pending micro-batch into an applied-but-unrefreshed
+        unit of work: coalesce, grow + mutate the input mirror (rollback
+        state captured), and take the scheduler's refresh decision.
+
+        Caller must hold ``_lock`` and must follow up with exactly one of
+        :meth:`commit_batch` (after executing the decision — here or in the
+        serving tier's batched cross-tenant launch) or
+        :meth:`rollback_batch` (on failure).  Marks the session busy until
+        then.  Returns ``None`` when nothing is pending.
+        """
+        if not self._pending:
+            return None
         self._busy = True
         try:
             batch = self._pending
@@ -274,53 +342,89 @@ class StreamSession:
                 rids, vals, signs = concat_records(records)
                 res = CoalesceResult(make_delta(rids, vals, signs),
                                      n_in, n_in, 0, 0, 0)
-            with self._lock:
-                if res.delta is None:          # everything cancelled out
-                    action, refresh_s, retraced = "noop", 0.0, False
-                else:
-                    # mirror mutation must be rollback-able: rerun() consumes
-                    # the updated mirror, so it cannot simply be deferred
-                    # until after the refresh succeeds
-                    rid = np.asarray(res.delta.record_ids)
-                    dvalid = np.asarray(res.delta.valid)
-                    rows = np.unique(rid[dvalid])
-                    saved = (self._mkeys[rows].copy(),
-                             {n: a[rows].copy()
-                              for n, a in self._mvalues.items()},
-                             self._mvalid[rows].copy())
-                    apply_delta_host(self._mkeys, self._mvalues,
-                                     self._mvalid, res.delta)
-                    decision = self.scheduler.decide(
-                        res.n_out, state_rows=int(self._mvalid.sum()),
-                        store_file_bytes=self.session.store_bytes(),
-                        store_live_bytes=self.session.store_live_bytes())
-                    gen0 = jitcache.generation()
-                    try:
-                        if decision.action == "update":
-                            rep = self.session.update(res.delta)
-                        else:
-                            rep = self.session.rerun(self._mirror_kv())
-                    except BaseException:
-                        # failed refresh: put the mirror back so it keeps
-                        # matching the state the engine actually computed
-                        skeys, svals, svalid = saved
-                        self._mkeys[rows] = skeys
-                        for n, a in self._mvalues.items():
-                            a[rows] = svals[n]
-                        self._mvalid[rows] = svalid
-                        raise
-                    # a bumped trace generation marks this batch's
-                    # wall-clock as compile-tainted
-                    retraced = jitcache.generation() != gen0
-                    self.scheduler.observe(decision.action, res.n_out,
-                                           rep.seconds, compiled=retraced)
-                    action, refresh_s = decision.action, rep.seconds
-            self.metrics.observe_batch(
-                n_in=n_in, n_engine=res.n_out, action=action,
-                latency_s=time.perf_counter() - first_arrival,
-                refresh_s=refresh_s, epoch=epoch, retraced=retraced)
+            if res.delta is None:              # everything cancelled out
+                return PreparedBatch(records, first_arrival, epoch, n_in,
+                                     res, None, None, None)
+            # mirror mutation must be rollback-able: rerun() consumes the
+            # updated mirror, so it cannot simply be deferred until after
+            # the refresh succeeds
+            rid = np.asarray(res.delta.record_ids)
+            dvalid = np.asarray(res.delta.valid)
+            if dvalid.any():
+                self._grow_to(int(rid[dvalid].max()) + 1)
+            rows = np.unique(rid[dvalid])
+            saved = (self._mkeys[rows].copy(),
+                     {n: a[rows].copy() for n, a in self._mvalues.items()},
+                     self._mvalid[rows].copy())
+            apply_delta_host(self._mkeys, self._mvalues, self._mvalid,
+                             res.delta)
+            decision = self.scheduler.decide(
+                res.n_out, state_rows=int(self._mvalid.sum()),
+                store_file_bytes=self.session.store_bytes(),
+                store_live_bytes=self.session.store_live_bytes())
+            return PreparedBatch(records, first_arrival, epoch, n_in, res,
+                                 rows, saved, decision)
+        except BaseException:
+            self._busy = False
+            raise
+
+    def rollback_batch(self, prep: PreparedBatch) -> None:
+        """Put the mirror back after a failed refresh so it keeps matching
+        the state the engine actually computed.  (Mirror growth is *not*
+        undone — the extra rows are invalid and harmless.)"""
+        try:
+            if prep.saved is not None:
+                skeys, svals, svalid = prep.saved
+                self._mkeys[prep.rows] = skeys
+                for n, a in self._mvalues.items():
+                    a[prep.rows] = svals[n]
+                self._mvalid[prep.rows] = svalid
         finally:
             self._busy = False
+
+    def commit_batch(self, prep: PreparedBatch, action: str,
+                     refresh_s: float, retraced: bool) -> None:
+        """Record a completed refresh (run here or by the serving tier) in
+        the scheduler's cost model and the metrics."""
+        try:
+            if prep.decision is not None and action != "noop":
+                self.scheduler.observe(action, prep.res.n_out, refresh_s,
+                                       compiled=retraced)
+            self.metrics.observe_batch(
+                n_in=prep.n_in, n_engine=prep.res.n_out, action=action,
+                latency_s=time.perf_counter() - prep.first_arrival,
+                refresh_s=refresh_s, epoch=prep.epoch, retraced=retraced)
+        finally:
+            self._busy = False
+
+    def execute_prepared(self, prep: PreparedBatch) -> str:
+        """Run a prepared batch's scheduled refresh on this session's own
+        engine — the per-tenant path (the serving tier's batched path runs
+        the engine itself and calls commit/rollback directly).  Caller
+        holds ``_lock``.  Returns the action taken."""
+        if prep.decision is None:
+            self.commit_batch(prep, "noop", 0.0, False)
+            return "noop"
+        # a bumped trace generation marks this batch's wall-clock as
+        # compile-tainted
+        gen0 = jitcache.generation()
+        try:
+            if prep.decision.action == "update":
+                rep = self.session.update(prep.res.delta)
+            else:
+                rep = self.session.rerun(self._mirror_kv())
+        except BaseException:
+            self.rollback_batch(prep)
+            raise
+        retraced = jitcache.generation() != gen0
+        self.commit_batch(prep, prep.decision.action, rep.seconds, retraced)
+        return prep.decision.action
+
+    def _process_batch(self) -> None:
+        with self._lock:
+            prep = self.prepare_batch()
+            if prep is not None:
+                self.execute_prepared(prep)
 
     # -- synchronization ---------------------------------------------------
     @property

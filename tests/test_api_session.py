@@ -189,23 +189,36 @@ class TestIncrementalIterative:
 # ---------------------------------------------------------------------------
 
 def test_distributed_via_config_parity():
-    # deliberately uses the pre-MeshConfig flat spelling: the deprecated
-    # aliases must keep working (one release) and warn
     script = """
-import numpy as np, jax, jax.numpy as jnp, warnings
+import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
-from repro.api import Session, RunConfig, make_delta
+from repro.api import Session, RunConfig, MeshConfig, make_delta
 from repro.apps import pagerank as pr
 
 S, F = 256, 5
 nbrs = pr.random_graph(S, F, seed=11, p_edge=0.5)
 spec, struct = pr.make_job(nbrs)
 mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
-with warnings.catch_warnings(record=True) as caught:
-    warnings.simplefilter("always")
-    cfg = RunConfig(mesh=mesh, shuffle_cap=512, max_iters=60, tol=1e-7)
-assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-assert cfg.mesh.shuffle_cap == 512 and cfg.shuffle_cap is None
+
+# the pre-PR-7 flat spelling was removed after its one-release
+# deprecation window: bare Mesh now fails fast with a pointer to
+# MeshConfig, and the flat knobs are unknown kwargs
+try:
+    RunConfig(mesh=mesh, max_iters=60)
+except TypeError as e:
+    assert "MeshConfig" in str(e), e
+else:
+    raise AssertionError("bare Mesh accepted")
+try:
+    RunConfig(mesh=MeshConfig(mesh, axis="data"), shuffle_cap=512)
+except TypeError:
+    pass
+else:
+    raise AssertionError("flat shuffle_cap accepted")
+
+cfg = RunConfig(mesh=MeshConfig(mesh, axis="data", shuffle_cap=512),
+                max_iters=60, tol=1e-7)
+assert cfg.mesh.shuffle_cap == 512
 sess = Session(spec, cfg)
 rep = sess.run(struct)
 assert rep.mode == "distributed", rep.mode

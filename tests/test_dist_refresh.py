@@ -320,30 +320,22 @@ def test_meshconfig_validation():
         MeshConfig(object())
 
 
-def test_flat_mesh_kwargs_deprecated_but_equivalent():
-    import warnings
-
+def test_flat_mesh_kwargs_removed():
+    # the PR-7 deprecation window is over: RunConfig only takes a
+    # MeshConfig, and the flat knobs are gone entirely
     from repro.api import MeshConfig, RunConfig
 
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        cfg = RunConfig(mesh=_FakeMesh(), mesh_axis="data", pod_axis="pod",
-                        shuffle_cap=128, partition_cap=64)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    mc = cfg.mesh
-    assert isinstance(mc, MeshConfig)
-    assert (mc.axis, mc.pod_axis, mc.shuffle_cap, mc.partition_cap) == \
-        ("data", "pod", 128, 64)
-    # the flat fields are consumed: one source of truth post-normalization
-    assert cfg.shuffle_cap is None and cfg.mesh_axis is None
-    # replace() round-trips without re-warning
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        cfg2 = cfg.replace(tol=1e-5)
-    assert cfg2.mesh is mc
+    with pytest.raises(TypeError, match="MeshConfig"):
+        RunConfig(mesh=_FakeMesh())
+    for bad in ({"mesh_axis": "data"}, {"pod_axis": "pod"},
+                {"shuffle_cap": 128}, {"partition_cap": 64}):
+        with pytest.raises(TypeError):
+            RunConfig(**bad)
 
-    with pytest.raises(ValueError, match="cannot be combined"):
-        RunConfig(mesh=MeshConfig(_FakeMesh(), axis="data"),
-                  shuffle_cap=128)
-    with pytest.raises(ValueError, match="mesh"):
-        RunConfig(shuffle_cap=128)
+    mc = MeshConfig(_FakeMesh(), axis="data", pod_axis="pod",
+                    shuffle_cap=128, partition_cap=64)
+    cfg = RunConfig(mesh=mc)
+    assert cfg.mesh is mc
+    assert not hasattr(cfg, "shuffle_cap") and not hasattr(cfg, "mesh_axis")
+    cfg2 = cfg.replace(tol=1e-5)
+    assert cfg2.mesh is mc

@@ -1,0 +1,304 @@
+"""repro.serve: SLO scheduling units, batched cross-tenant refresh parity,
+admission shedding, store spill/reload, budget enforcement order, tenant
+churn, and the MultiSessionServer compatibility shim."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import RunConfig, Session, StreamConfig
+from repro.apps import wordcount as wc
+from repro.serve import (
+    AdmissionController, ServeTier, SLOClass, deadline_slack,
+    order_by_priority,
+)
+from repro.serve import loadgen
+from repro.stream import StreamSession
+
+BACKENDS = ("xla", "pallas")
+
+
+def _fleet(tier, n, backend, *, seed=0, vocab=32, n_docs=6, **kw):
+    return loadgen.make_fleet(tier, n, backend=backend, seed=seed,
+                              vocab=vocab, n_docs=n_docs, **kw)
+
+
+def _apply_rounds(tier, mirrors, rounds, *, seed=1, vocab=32):
+    """Scripted update stream: deterministic across tiers with equal
+    seeds.  Synchronous (no scheduler thread): submit one round, drain."""
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        for name in mirrors:
+            loadgen.submit_update(tier, mirrors, name, rng, vocab)
+        tier.drain(timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# SLO scheduling units
+# ---------------------------------------------------------------------------
+
+def test_slo_class_units():
+    lat = SLOClass.latency(target_p95_ms=50.0)
+    thr = SLOClass.throughput()
+    be = SLOClass.best_effort()
+    assert lat.rank < thr.rank < be.rank
+    assert lat.deadline_ms == 50.0          # defaults to the p95 target
+    assert not lat.sheddable and not thr.sheddable and be.sheddable
+    with pytest.raises(ValueError):
+        SLOClass(kind="gold")
+    with pytest.raises(ValueError):
+        SLOClass(deadline_ms=-1.0)
+
+
+def test_order_by_priority_ranks_then_slack():
+    tier = ServeTier(batch_refresh=False)
+    mirrors = _fleet(tier, 3, "xla", seed=3)
+    names = list(mirrors)
+    tier.handle(names[0]).slo = SLOClass.best_effort()
+    tier.handle(names[1]).slo = SLOClass.latency(target_p95_ms=20.0)
+    tier.handle(names[2]).slo = SLOClass.throughput()
+    ordered = order_by_priority(list(tier.handles.values()))
+    assert [h.name for h in ordered] == [names[1], names[2], names[0]]
+    # slack of an idle tenant is bounded by its deadline
+    assert deadline_slack(tier.handle(names[1])) <= 0.020 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# batched cross-tenant refresh: bit-for-bit vs per-tenant and cold runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_matches_solo_and_cold_bit_identical(backend):
+    results = {}
+    for mode in ("batched", "solo"):
+        tier = ServeTier(batch_refresh=(mode == "batched"))
+        mirrors = _fleet(tier, 4, backend, seed=11)
+        _apply_rounds(tier, mirrors, rounds=3, seed=12)
+        results[mode] = {n: np.asarray(tier[n].result["c"])
+                        for n in mirrors}
+        if mode == "batched":
+            stats = tier.stats()
+            assert stats["batched_launches"] >= 1
+            assert stats["batched_refreshes"] >= 4
+            final_docs = {n: m.copy() for n, m in mirrors.items()}
+    for name, got in results["batched"].items():
+        np.testing.assert_array_equal(got, results["solo"][name])
+        cold = Session(wc.make_spec(32),
+                       RunConfig(backend=backend, value_bytes=4))
+        docs = final_docs[name]
+        cold.run(wc.make_input(np.arange(len(docs)), docs))
+        np.testing.assert_array_equal(got, np.asarray(cold.result["c"]))
+
+
+def test_one_launch_per_compatible_group():
+    tier = ServeTier()
+    mirrors = _fleet(tier, 5, "xla", seed=21)
+    rng = np.random.default_rng(22)
+    for name in mirrors:
+        loadgen.submit_update(tier, mirrors, name, rng, 32)
+    tier.drain(timeout=120)     # synchronous: all five due on one sweep
+    stats = tier.stats()
+    assert stats["batched_launches"] == 1
+    assert stats["batched_refreshes"] == 5
+
+
+def test_group_partitions_batching():
+    tier = ServeTier()
+    mirrors = _fleet(tier, 4, "xla", seed=31,
+                     group_of=lambda i: "a" if i < 2 else "b")
+    rng = np.random.default_rng(32)
+    for name in mirrors:
+        loadgen.submit_update(tier, mirrors, name, rng, 32)
+    tier.drain(timeout=120)
+    assert tier.stats()["batched_launches"] == 2
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_sheds_best_effort_only():
+    tier = ServeTier(admission=AdmissionController(max_backlog_seconds=1e-9))
+    mirrors = _fleet(tier, 2, "xla", seed=41,
+                     slo_of=lambda i: (SLOClass.latency(target_p95_ms=1e4)
+                                       if i == 0 else SLOClass.best_effort()))
+    lat, be = list(mirrors)
+    # two clean rounds so the best-effort tenant has an update cost sample
+    # (these may themselves shed: any queued row overflows a 1ns budget)
+    _apply_rounds(tier, mirrors, rounds=2, seed=42)
+    h = tier.handle(be)
+    shed0 = h.shed_submits
+    rng = np.random.default_rng(43)
+    assert loadgen.submit_update(tier, mirrors, be, rng, 32)   # empty tier
+    # queued rows now make the (tiny) backlog budget overflow
+    assert not loadgen.submit_update(tier, mirrors, be, rng, 32)
+    assert loadgen.submit_update(tier, mirrors, lat, rng, 32)  # never shed
+    assert h.shed_submits == shed0 + 1 and h.shed_rows == 2 * (shed0 + 1)
+    assert tier.stats()["admission"]["shed_submits"] == shed0 + 1
+    tier.drain(timeout=120)
+    # queue drained: best-effort admits again
+    assert loadgen.submit_update(tier, mirrors, be, rng, 32)
+    tier.drain(timeout=120)
+
+
+def test_admission_prices_fleet_without_samples_at_zero():
+    ctl = AdmissionController(max_backlog_seconds=0.5)
+    tier = ServeTier(admission=ctl)
+    mirrors = _fleet(tier, 2, "xla", seed=51)
+    rng = np.random.default_rng(52)
+    # no clean update sample yet: the seeded rerun estimate (which holds
+    # cold-compile seconds) must not count, so everything is admitted
+    for name in mirrors:
+        assert loadgen.submit_update(tier, mirrors, name, rng, 32)
+    assert ctl.backlog_seconds(tier.handles.values()) == 0.0
+    tier.drain(timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# spill / reload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_spill_reload_bit_identical(backend, tmp_path):
+    results = {}
+    for mode in ("spilled", "resident"):
+        tier = ServeTier(spill_dir=tmp_path / mode)
+        mirrors = _fleet(tier, 2, backend, seed=61)
+        cold_name, hot_name = list(mirrors)
+        _apply_rounds(tier, mirrors, rounds=2, seed=62)
+        if mode == "spilled":
+            h = tier.handle(cold_name)
+            freed = tier.spill.spill(h)
+            assert freed > 0 and h.spilled
+            assert tier[cold_name].store_bytes() == 0
+            assert list((tmp_path / mode).glob("*.npz"))
+        # the spilled tenant's next delta transparently reloads its store
+        _apply_rounds(tier, mirrors, rounds=1, seed=63)
+        if mode == "spilled":
+            assert not tier.handle(cold_name).spilled
+            assert not list((tmp_path / mode).glob("*.npz"))
+        results[mode] = {n: np.asarray(tier[n].result["c"])
+                        for n in mirrors}
+    for name in results["spilled"]:
+        np.testing.assert_array_equal(results["spilled"][name],
+                                      results["resident"][name])
+
+
+def test_remove_reloads_spilled_tenant(tmp_path):
+    tier = ServeTier(spill_dir=tmp_path)
+    mirrors = _fleet(tier, 1, "xla", seed=71)
+    (name,) = mirrors
+    _apply_rounds(tier, mirrors, rounds=1, seed=72)
+    tier.spill.spill(tier.handle(name))
+    ss = tier.remove(name)
+    assert ss.store_bytes() > 0            # resident again
+    assert not ss._managed
+
+
+# ---------------------------------------------------------------------------
+# S3: budget enforcement — obsolete bytes first, then LRU spill
+# ---------------------------------------------------------------------------
+
+def test_budget_compacts_obsolete_bytes_first():
+    tier = ServeTier(batch_refresh=False)
+    mirrors = _fleet(tier, 2, "xla", seed=81)
+    churned, quiet = list(mirrors)
+    rng = np.random.default_rng(82)
+    for _ in range(6):                     # churn -> obsolete store bytes
+        loadgen.submit_update(tier, mirrors, churned, rng, 32)
+        tier.drain(timeout=120)
+    loadgen.submit_update(tier, mirrors, quiet, rng, 32)
+    tier.drain(timeout=120)
+    assert tier[churned].session.store_obsolete_bytes() > 0
+    tier.store_budget_bytes = 1            # force enforcement
+    tier._enforce_budget()
+    stats = tier.stats()
+    assert stats["reclaimed_bytes"][churned] > 0
+    assert stats["classes"][churned]["reclaimed_bytes"] > 0
+    # compaction alone cannot reach an impossible budget
+    assert stats["over_budget"]
+
+
+def test_budget_spills_lru_after_compaction(tmp_path):
+    tier = ServeTier(spill_dir=tmp_path, store_budget_bytes=1)
+    mirrors = _fleet(tier, 3, "xla", seed=91)
+    _apply_rounds(tier, mirrors, rounds=1, seed=92)
+    oldest = list(mirrors)[0]
+    tier.handle(oldest).last_active = 0.0  # make LRU order deterministic
+    tier._enforce_budget()
+    assert all(h.spilled for h in tier.handles.values())
+    assert tier.total_store_bytes() == 0
+    snap = tier.stats()["spill"]
+    assert snap["spills"] == 3 and snap["bytes_spilled"] > 0
+
+
+# ---------------------------------------------------------------------------
+# S4: tenant churn — add / remove / re-add
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tenant_churn_add_remove_readd(backend, tmp_path):
+    before = threading.active_count()
+    tier = ServeTier(spill_dir=tmp_path)
+    mirrors = _fleet(tier, 3, backend, seed=101)
+    names = list(mirrors)
+    with tier:
+        _apply_rounds(tier, mirrors, rounds=1, seed=102)
+        # spill one tenant, then remove it: the store must come back
+        tier.spill.spill(tier.handle(names[0]))
+        parked = tier.remove(names[0])
+        assert parked.store_bytes() > 0
+        rng = np.random.default_rng(103)
+        loadgen.submit_update(tier, mirrors, names[1], rng, 32)
+        tier.drain(timeout=120)
+        # re-admit the parked session under the tier (idempotent start)
+        tier.add(parked, slo=SLOClass.throughput())
+        assert tier.handle(names[0]).slo.kind == "throughput"
+        _apply_rounds(tier, mirrors, rounds=1, seed=104)
+    # compare against a churn-free twin fed the same scripted updates
+    twin = ServeTier()
+    twin_mirrors = _fleet(twin, 3, backend, seed=101)
+    _apply_rounds(twin, twin_mirrors, rounds=1, seed=102)
+    rng = np.random.default_rng(103)
+    loadgen.submit_update(twin, twin_mirrors, names[1], rng, 32)
+    twin.drain(timeout=120)
+    _apply_rounds(twin, twin_mirrors, rounds=1, seed=104)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(tier[n].result["c"]),
+                                      np.asarray(twin[n].result["c"]))
+    tier.stop()
+    assert threading.active_count() == before          # no leaked threads
+    with pytest.raises(ValueError, match="already registered"):
+        tier.add(parked)
+
+
+# ---------------------------------------------------------------------------
+# MultiSessionServer shim
+# ---------------------------------------------------------------------------
+
+def test_multi_session_server_shim():
+    from repro.stream import MultiSessionServer
+
+    with pytest.warns(DeprecationWarning, match="repro.serve.ServeTier"):
+        server = MultiSessionServer(store_budget_bytes=64 * 1024)
+    assert isinstance(server, ServeTier)
+    assert not server.batch_refresh        # old per-tenant refresh path
+    docs = np.random.default_rng(111).integers(0, 32, (6, 4)).astype(np.int32)
+    spec, data = wc.make_job(docs, 32)
+    server.add(StreamSession(spec, data, name="legacy",
+                             config=RunConfig(backend="xla", value_bytes=4),
+                             stream=StreamConfig(max_batch_delay=0.0)))
+    with server:
+        new = docs.copy()
+        new[0] = 7
+        server.submit("legacy", np.array([0, 0], np.int32),
+                      {"w": np.stack([docs[0], new[0]])},
+                      np.array([-1, 1], np.int8))
+        server.drain(timeout=120)
+    stats = server.stats()
+    for key in ("tenants", "total_store_bytes", "sweeps", "jit"):
+        assert key in stats
+    cold = Session(spec, RunConfig(backend="xla", value_bytes=4))
+    cold.run(wc.make_input(np.arange(len(new)), new))
+    np.testing.assert_array_equal(np.asarray(server["legacy"].result["c"]),
+                                  np.asarray(cold.result["c"]))

@@ -272,17 +272,28 @@ def test_tenant_drain_under_running_server():
 
 
 def test_record_id_outside_mirror_rejected():
-    """A bad record id is refused at submit() time — before it can join a
-    batch and kill the worker."""
+    """With growth disabled, a bad record id is refused at submit() time —
+    before it can join a batch and kill the worker.  Negative ids are
+    always refused."""
     docs = np.zeros((4, 3), np.int32)
     spec, data = wc.make_job(docs, 8)
     ss = StreamSession(spec, data,
-                       stream=StreamConfig(max_batch_delay=0.0))
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           grow_records=False))
     ss.start(background=False)
     with pytest.raises(ValueError, match="mirror capacity"):
         ss.submit([17], {"w": np.zeros((1, 3), np.int32)}, [1])
     with pytest.raises(ValueError, match="outside"):
         ss.submit([-1], {"w": np.zeros((1, 3), np.int32)}, [1])
+    # max_records caps growth the same way even when growth is on
+    ss2 = StreamSession(spec, data, name="capped",
+                        stream=StreamConfig(max_batch_delay=0.0,
+                                            max_records=10))
+    ss2.start(background=False)
+    with pytest.raises(ValueError, match="mirror capacity"):
+        ss2.submit([10], {"w": np.zeros((1, 3), np.int32)}, [1])
+    with pytest.raises(ValueError, match="outside"):
+        ss2.submit([-3], {"w": np.zeros((1, 3), np.int32)}, [1])
 
 
 def test_bad_record_keeps_stream_alive():
@@ -292,7 +303,8 @@ def test_bad_record_keeps_stream_alive():
     docs = rng.integers(0, 16, (8, 3)).astype(np.int32)
     spec, data = wc.make_job(docs, 16)
     ss = StreamSession(spec, data,
-                       stream=StreamConfig(max_batch_delay=0.0))
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           grow_records=False))
     with ss:
         with pytest.raises(ValueError, match="mirror capacity"):
             ss.submit([99], {"w": np.zeros((1, 3), np.int32)}, [1])
@@ -321,11 +333,83 @@ def test_source_bad_record_rejected_stream_continues():
     mirror[2] = new
     src.seal()
     ss = StreamSession(spec, data, source=src,
-                       stream=StreamConfig(max_batch_delay=0.0))
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           grow_records=False))
     ss.start(background=False)
     ss.drain(timeout=60)
     assert ss.metrics.rows_rejected == 1
     np.testing.assert_array_equal(ss.result["c"], wc.oracle(mirror, 16))
+
+
+# ---------------------------------------------------------------------------
+# dynamic input-mirror growth (streams inserting brand-new record ids)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mirror_grows_for_new_record_ids(backend):
+    """Streaming inserts past the seed capacity grow the mirror (and the
+    engine's record structures) geometrically; results keep matching a
+    cold run over the full grown input."""
+    rng = np.random.default_rng(21)
+    docs = rng.integers(0, 32, (6, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, 32)
+    seed_cap = int(np.asarray(data.keys).shape[0])
+    ss = StreamSession(spec, data,
+                       config=RunConfig(backend=backend, value_bytes=4),
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    ss.start(background=False)
+    # brand-new record ids, including one far past the seed capacity
+    inserts = {seed_cap: rng.integers(0, 32, (3,)).astype(np.int32),
+               seed_cap + 7: rng.integers(0, 32, (3,)).astype(np.int32),
+               4 * seed_cap + 3: rng.integers(0, 32, (3,)).astype(np.int32)}
+    for rid, row in inserts.items():
+        ss.submit([rid], {"w": row[None]}, [1])
+        ss.drain(timeout=60)
+    assert ss.grow_events >= 2              # geometric: few events, not 3
+    cap = ss.mirror_kv().capacity
+    assert cap >= 4 * seed_cap + 4 and (cap & (cap - 1)) == 0
+    full = np.concatenate([docs] + [row[None] for row in inserts.values()])
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(full, 32))
+    # updating a grown-in record keeps working
+    new = rng.integers(0, 32, (3,)).astype(np.int32)
+    old = inserts[seed_cap + 7]
+    ss.submit([seed_cap + 7] * 2, {"w": np.stack([old, new])}, [-1, 1])
+    ss.drain(timeout=60)
+    full[len(docs) + 1] = new
+    np.testing.assert_array_equal(ss.result["c"], wc.oracle(full, 32))
+
+
+def test_mirror_growth_iterative_driver():
+    """Growth reaches the iterative driver's structure mirror + reverse
+    index: a pagerank stream can add brand-new pages.  (The state space is
+    declared larger than the seed graph — record growth extends records,
+    not the DK space.)"""
+    nbrs = pr.random_graph(24, 3, seed=5, p_edge=0.9)
+    spec = pr.make_spec(64)                 # headroom for streamed vertices
+    struct = pr.make_struct(nbrs)
+    seed_cap = int(np.asarray(struct.keys).shape[0])
+    cfg = RunConfig(max_iters=150, tol=1e-7, value_bytes=4)
+    ss = StreamSession(spec, struct, config=cfg,
+                       stream=StreamConfig(max_batch_delay=0.0,
+                                           crossover=2.0))
+    ss.start(background=False)
+    # a new page pointing at pages 0..2 (record id past the seed capacity)
+    new_row = np.zeros_like(np.asarray(struct.values["nbrs"])[0])
+    new_row[:] = -1
+    new_row[:3] = [0, 1, 2]
+    ss.submit([seed_cap + 1], {"nbrs": new_row[None]}, [1])
+    ss.drain(timeout=120)
+    assert ss.grow_events == 1
+    job = ss.session._driver.job
+    assert job.capacity == ss.mirror_kv().capacity
+    assert bool(job.struct_valid[seed_cap + 1])
+    # the refreshed ranks match a cold converge over the grown structure
+    grown = ss.mirror_kv()
+    cold = Session(spec, cfg)
+    cold.run(grown)
+    np.testing.assert_allclose(ss.result["r"], cold.result["r"],
+                               rtol=0, atol=5e-5)
 
 
 def test_failed_refresh_rolls_back_mirror():
