@@ -1,0 +1,132 @@
+"""Incremental-query benchmark: ``Query.update(delta)`` vs ``Query.rerun()``
+(the Fig. 8 crossover, restated for the dql workload family), per backend.
+
+Two workloads from :mod:`repro.dql.workloads`:
+
+  * ``join``     — incremental equi-join (two sources, join-stage refresh
+    through per-stage MRBG slices);
+  * ``windowed`` — sliding-window aggregation (single-stage lowering: the
+    window is key-space expansion, so the engine's accumulator/MRBG
+    one-step paths carry the refresh).
+
+For each delta fraction the update path must be |Δ|-proportional, so at
+small fractions (≤1%) ``update`` has to beat ``rerun`` — that is the
+acceptance gate this file witnesses into ``BENCH_query.json``.  The
+steady-state retrace counter (:func:`repro.kernels.jitcache.generation`)
+is sampled around the timed updates: with the PR-6 bucketed delta ladder
+any nonzero delta is a latency-tail bug.
+
+    PYTHONPATH=src:. python benchmarks/query_latency.py --backend both \
+        --out BENCH_query.json                                  # full
+    PYTHONPATH=src:. python benchmarks/query_latency.py --tiny  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import RunConfig
+from repro.dql import workloads as wl
+from repro.kernels import jitcache
+
+REPS = 3
+
+
+def _time_each(fn, args_list):
+    """Median seconds of ``fn(a)`` over ``args_list`` (one call each)."""
+    ts = []
+    for a in args_list:
+        t0 = time.perf_counter()
+        fn(a)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _crossover(name, make_query, data, make_delta_fn, fracs, backend):
+    out = {}
+    for frac in fracs:
+        q = make_query().compile(RunConfig(backend=backend, value_bytes=4))
+        q.run(data)
+        # prewarm both paths: compiles land outside the timed region
+        q.update(make_delta_fn(frac, seed=1000))
+        q.rerun()
+        gen0 = jitcache.generation()
+        dt_up = _time_each(q.update, [make_delta_fn(frac, seed=2000 + i)
+                                      for i in range(REPS)])
+        retraces = jitcache.generation() - gen0
+        dt_re = _time_each(lambda _: q.rerun(), range(REPS))
+        speedup = dt_re / dt_up if dt_up > 0 else float("inf")
+        tag = f"query.{name}.{backend}.f{frac:g}"
+        emit(f"{tag}.update_ms", dt_up * 1e3,
+             f"retraces_steady={retraces}")
+        emit(f"{tag}.rerun_ms", dt_re * 1e3, f"speedup={speedup:.2f}x")
+        out[f"{frac:g}"] = {
+            "update_ms": dt_up * 1e3, "rerun_ms": dt_re * 1e3,
+            "speedup": speedup, "retraces_steady": int(retraces)}
+    return out
+
+
+def run_backend(backend: str, tiny: bool) -> dict:
+    out = {}
+
+    # -- incremental equi-join ---------------------------------------------
+    users = 256 if tiny else (512 if backend == "pallas" else 2048)
+    fracs = (0.01, 0.1) if tiny else (0.005, 0.01, 0.05, 0.25)
+    datas = wl.join_data(users, seed=3)
+    out["join"] = _crossover(
+        "join", lambda: wl.join_query(users), datas,
+        lambda frac, seed: wl.join_delta(datas, frac, seed=seed),
+        fracs, backend)
+
+    # -- windowed aggregation ----------------------------------------------
+    if tiny:
+        n, keys, wins, slide = 256, 8, 8, 4
+    elif backend == "pallas":
+        n, keys, wins, slide = 1024, 16, 16, 4
+    else:
+        n, keys, wins, slide = 8192, 64, 32, 4
+    events = wl.events_data(n, keys, t_max=wins * slide, seed=2)
+    out["windowed"] = _crossover(
+        "windowed",
+        lambda: wl.windowed_query(keys, size=2 * slide, slide=slide,
+                                  num_windows=wins),
+        events,
+        lambda frac, seed: wl.events_delta(events, frac,
+                                           t_max=wins * slide, seed=seed),
+        fracs, backend)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "both"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--out", default=None,
+                    help="write the results JSON here")
+    args = ap.parse_args()
+
+    backends = (("xla", "pallas") if args.backend == "both"
+                else (args.backend,))
+    results = {"platform": jax.default_backend(),
+               "note": "CPU wall-clock; pallas runs in interpret mode "
+                       "off-TPU (smaller full sizes)",
+               "tiny": args.tiny, "backends": {}}
+    for bk in backends:
+        results["backends"][bk] = run_backend(bk, args.tiny)
+    results["jit"] = jitcache.snapshot()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Incremental equi-join through the `repro.dql` query algebra.
+
+    PYTHONPATH=src python examples/incremental_join.py [--users 1024]
+
+Build the plan once — ``scan(spend) ⋈ scan(visits)`` — compile it into a
+Query (just another Session kind: RunReport, checkpointing and the
+streaming scheduler all apply), run it, then refresh it with signed
+deltas on either side.  The join stage keeps its own MRBG slice, so the
+refresh is |Δ|-proportional; ``rerun()`` is the full-recompute
+alternative past the update-vs-rerun crossover (paper Fig. 8; see
+``benchmarks/query_latency.py``).
+"""
+import argparse
+
+import numpy as np
+
+from repro import dql
+from repro.api import RunConfig, make_delta
+from repro.dql import workloads as wl
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--users", type=int, default=1024)
+ap.add_argument("--backend", default=None, choices=(None, "xla", "pallas"))
+args = ap.parse_args()
+
+USERS = args.users
+rng = np.random.default_rng(0)
+
+# ---- declare once: spend ⋈ visits on the user id ----
+plan = dql.scan("spend").join(dql.scan("visits"), num_keys=USERS,
+                              name="user_join")
+q = plan.compile(RunConfig(backend=args.backend, value_bytes=4))
+print(q.explain())
+
+datas = wl.join_data(USERS, seed=3)
+q.run(datas)
+vals, valid = q.relation()
+print(f"initial join: {int(valid.sum())}/{USERS} users on both sides")
+
+# ---- delta on one side only: '-' old row, '+' new value ----
+rows = rng.choice(USERS, size=max(1, USERS // 100), replace=False)
+rows = rows.astype(np.int32)
+old = np.asarray(datas["spend"].values["amt"])[rows]
+new = rng.uniform(1, 100, len(rows)).astype(np.float32)
+buf = np.empty(2 * len(rows), np.float32)
+buf[0::2], buf[1::2] = old, new
+delta = make_delta(np.repeat(rows, 2), {"amt": buf},
+                   np.tile(np.array([-1, 1], np.int8), len(rows)))
+report = q.update({"spend": delta})
+print(report.summary())
+
+# ---- verify against the dense oracle ----
+sp = np.asarray(datas["spend"].values["amt"]).copy()
+sp[rows] = new
+vals, valid = q.relation()
+want = np.asarray(datas["spend"].valid) & np.asarray(datas["visits"].valid)
+assert np.array_equal(valid, want)
+assert np.allclose(np.where(valid, vals["amt"], 0), np.where(want, sp, 0))
+assert np.allclose(np.where(valid, vals["n"], 0),
+                   np.where(want, np.asarray(datas["visits"].values["n"]), 0))
+print("incremental join refresh == recompute ✓")
+
+# ---- past the crossover, rerun() recomputes from the input mirrors ----
+q.rerun()
+vals2, valid2 = q.relation()
+assert np.array_equal(valid2, valid)
+assert np.allclose(np.where(valid2, vals2["amt"], 0),
+                   np.where(valid, vals["amt"], 0))
+print("rerun() == update() ✓")

@@ -163,6 +163,20 @@ def save_session(session, root: str) -> Path:
                  **{f"v_{n}": a for n, a in view.values.items()})
         _save_shard_stores(drv, tmp)
         out = commit()
+    elif drv.kind == "query":
+        tmp, commit = _atomic_epoch_dir(rootp, session.epoch)
+        metas = []
+        for i, st in enumerate(drv.stages):
+            view = st.view
+            np.savez(tmp / f"stage{i:02d}_view.npz", valid=view.valid,
+                     counts=view.counts,
+                     **{f"v_{n}": a for n, a in view.values.items()})
+            metas.append(_store_to_npz(st.store, tmp / f"stage{i:02d}.npz"))
+        (tmp / "query.json").write_text(json.dumps(
+            {"n_stages": len(drv.stages), "stores": metas,
+             "affected": drv._affected,
+             "schemas": [st.schemas for st in drv.stages]}))
+        out = commit()
     else:                                 # pragma: no cover
         raise ValueError(f"unknown driver kind {drv.kind!r}")
 
@@ -265,4 +279,27 @@ def load_session(cls, spec, root: str, config: Optional[RunConfig]):
                 "distributed one-step snapshots store per-shard MRBG slices "
                 "in local-key space; restore with a mesh of the same part "
                 "count as the one that wrote the checkpoint")
+    elif kind == "query":
+        from repro.dql.driver import RecordingView
+        d = _latest_epoch_dir(rootp)
+        qmeta = json.loads((d / "query.json").read_text())
+        if qmeta["n_stages"] != len(drv.stages):
+            raise ValueError(
+                f"snapshot has {qmeta['n_stages']} stages but the spec "
+                f"lowered to {len(drv.stages)}; restore with the same plan")
+        for i, st in enumerate(drv.stages):
+            vz = np.load(d / f"stage{i:02d}_view.npz")
+            values = {k[2:]: vz[k].copy() for k in vz.files
+                      if k.startswith("v_")}
+            st.view = RecordingView(st.plan.num_keys, values,
+                                    vz["valid"].copy(), vz["counts"].copy())
+            st.store = _store_from_npz(st.plan.num_keys,
+                                       d / f"stage{i:02d}.npz",
+                                       qmeta["stores"][i], cfg)
+            # json turns the (shape, dtype) tuples into lists — restore them
+            st.schemas = [
+                None if sch is None else
+                {c: (tuple(shape), dt) for c, (shape, dt) in sch.items()}
+                for sch in qmeta["schemas"][i]]
+        drv._affected = qmeta.get("affected", -1)
     return session

@@ -29,6 +29,8 @@ MODES = (
     "distributed-incr",   # per-shard delta refresh, one-step (§3.3 on mesh)
     "distributed-i2",     # per-shard delta refresh, iterative CPC (§5 on mesh)
     "distributed-warm",   # mirror re-partition + warm re-converge fallback
+    "query",              # full evaluation of a compiled delta query (dql)
+    "query-incremental",  # per-stage preserved-state query refresh (dql)
 )
 
 
@@ -72,6 +74,10 @@ class RunReport:
     # network-exchange telemetry: always present, zeros when nothing
     # crossed a wire (single-device paths)
     shuffle: ShuffleStats = field(default_factory=ShuffleStats)
+    # coalescer savings for the batch that produced this epoch, attached by
+    # the stream layer (None outside streaming): n_in/n_out/n_records/
+    # n_inserts/n_deletes/n_cancelled of the CoalesceResult
+    coalesce: Optional[Dict[str, int]] = None
     # dense output values; {} when the producer skipped materialization
     # (run/update return reports without it — read session.result instead)
     result: Dict[str, np.ndarray] = field(default_factory=dict)
@@ -87,6 +93,8 @@ class RunReport:
         if self.store_bytes:
             parts.append(f"store={self.store_bytes}B "
                          f"(live {self.live_bytes}B)")
+        if self.coalesce and self.coalesce.get("n_cancelled"):
+            parts.append(f"coalesced=-{self.coalesce['n_cancelled']}rows")
         if self.shuffle.edges_exchanged or self.shuffle.dropped:
             parts.append(f"shuffle={self.shuffle.edges_exchanged}e/"
                          f"{self.shuffle.bytes_moved}B"

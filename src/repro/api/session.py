@@ -79,7 +79,13 @@ class Session:
             elif config.plain_shuffle:
                 return _PlainIter(spec, config)
             return _IncrIter(spec, config)
-        raise TypeError(f"spec must be JobSpec or IterSpec, "
+        # deferred import: repro.dql lowers *to* this layer, so the api
+        # package must not import it at module load
+        from repro.dql.driver import _QueryDriver
+        from repro.dql.lower import QuerySpec
+        if isinstance(spec, QuerySpec):
+            return _QueryDriver(spec, config)
+        raise TypeError(f"spec must be JobSpec, IterSpec or QuerySpec, "
                         f"got {type(spec).__name__}")
 
     # -- lifecycle ---------------------------------------------------------
@@ -101,9 +107,12 @@ class Session:
         t0 = time.perf_counter()
         # bucket the delta's row capacity so the jitted refresh path traces
         # once per power-of-two bucket, not once per distinct row count
-        cap = next_bucket(delta.capacity, self.config.delta_bucket_min)
-        if cap != delta.capacity:
-            delta = pad_delta(delta, cap)
+        # (multi-source query deltas arrive as {source: DeltaKV}; the query
+        # driver buckets each encoded feed itself)
+        if isinstance(delta, DeltaKV):
+            cap = next_bucket(delta.capacity, self.config.delta_bucket_min)
+            if cap != delta.capacity:
+                delta = pad_delta(delta, cap)
         self._driver.update(delta)
         self.epoch += 1
         return self._finish(t0)

@@ -1,0 +1,27 @@
+"""repro.dql: a composable delta algebra compiled to the kernel layer.
+
+Incremental queries as a workload family: build a plan with
+:func:`scan` and the fluent operators (``map``/``filter``/``project``/
+``window``/``group_by``/``join``), ``compile()`` it into a
+:class:`Query` — just another :class:`repro.api.Session` kind — and
+refresh it with signed deltas::
+
+    from repro import dql
+    q = (dql.scan("docs")
+            .map(lambda v: {"w": v["w"], "c": ones_like(v["w"])})
+            .group_by("w", num_keys=vocab, value="c")
+            .compile(RunConfig(backend="xla")))
+    q.run(docs_kv)
+    q.update(delta)        # preserved-state, |Δ|-proportional refresh
+
+See :mod:`repro.dql.algebra` for the operator/delta-rule table,
+:mod:`repro.dql.lower` for the planner, :mod:`repro.dql.driver` for the
+incremental runtime, :mod:`repro.dql.derived` for the coalescer
+re-derivation, and :mod:`repro.dql.workloads` for ready-made plans.
+"""
+from repro.dql.algebra import AGG_KINDS, Q, explain, scan
+from repro.dql.lower import QuerySpec, lower
+from repro.dql.query import Query, evaluate
+
+__all__ = ["AGG_KINDS", "Q", "Query", "QuerySpec", "evaluate", "explain",
+           "lower", "scan"]

@@ -361,3 +361,23 @@ def _shuffle_reduce_fused(kind, k2, mk, leaf, treedef, valid, sign,
     return ShuffleReduced(k2s, mks, jax.tree.unflatten(treedef, [vals_s]),
                           live, perm, jax.tree.unflatten(treedef, [acc]),
                           counts)
+
+
+# ---------------------------------------------------------------------------
+# group_reduce: the dql lowering shim
+# ---------------------------------------------------------------------------
+
+def group_reduce(reducer, keys: jax.Array, values: Any, valid: jax.Array,
+                 num_groups: int, backend: Optional[str] = None):
+    """Grouped reduce over a dense group-id space (``repro.dql`` lowering).
+
+    Same contract as :func:`segment_reduce` — returns
+    ``(accumulated pytree [num_groups, ...], counts [num_groups] int32)`` —
+    but accepts the delta algebra's emission convention directly: negative
+    or out-of-range keys mask the row (the idiom fused group_by chains use
+    for padded fanout slots), composing with ``valid``.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    live = jnp.asarray(valid, jnp.bool_) & (keys >= 0) & (keys < num_groups)
+    return segment_reduce(reducer, keys, values, live, num_groups,
+                          backend=backend)

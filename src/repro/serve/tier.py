@@ -409,6 +409,11 @@ class ServeTier:
                                    for t in tenants.values()),
             "rows_rejected": sum(t["rows_rejected"]
                                  for t in tenants.values()),
+            # tier-wide coalescer savings (rows the engine never saw)
+            "rows_cancelled": sum(t["rows_cancelled"]
+                                  for t in tenants.values()),
+            "net_inserts": sum(t["net_inserts"] for t in tenants.values()),
+            "net_deletes": sum(t["net_deletes"] for t in tenants.values()),
             "jit": jitcache.snapshot(),
         }
         if self.spill is not None:

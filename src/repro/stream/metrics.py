@@ -22,6 +22,9 @@ class StreamMetrics:
         self.busy_seconds = 0.0          # time spent inside refreshes
         self.rows_in = 0                 # delta rows ingested
         self.rows_engine = 0             # rows surviving the coalescer
+        self.rows_cancelled = 0          # rows the coalescer cancelled
+        self.net_inserts = 0             # records whose net effect inserted
+        self.net_deletes = 0             # records whose net effect deleted
         self.rows_rejected = 0           # rows refused at ingest (bad ids)
         self.retrace_batches = 0         # batches that traced a jit kernel
         self.batches = 0
@@ -35,10 +38,15 @@ class StreamMetrics:
     # -- recording ---------------------------------------------------------
     def observe_batch(self, n_in: int, n_engine: int, action: str,
                       latency_s: float, refresh_s: float,
-                      epoch: int = -1, retraced: bool = False) -> None:
+                      epoch: int = -1, retraced: bool = False,
+                      n_cancelled: int = 0, n_inserts: int = 0,
+                      n_deletes: int = 0) -> None:
         with self._lock:
             self.rows_in += n_in
             self.rows_engine += n_engine
+            self.rows_cancelled += n_cancelled
+            self.net_inserts += n_inserts
+            self.net_deletes += n_deletes
             self.batches += 1
             self.retrace_batches += int(retraced)
             self.refreshes[action] = self.refreshes.get(action, 0) + 1
@@ -91,6 +99,9 @@ class StreamMetrics:
                 "rows_engine": self.rows_engine,
                 "coalesce_savings": 1.0 - (self.rows_engine /
                                            max(self.rows_in, 1)),
+                "rows_cancelled": self.rows_cancelled,
+                "net_inserts": self.net_inserts,
+                "net_deletes": self.net_deletes,
                 "rows_rejected": self.rows_rejected,
                 "batches": self.batches,
                 "retrace_batches": self.retrace_batches,

@@ -390,10 +390,13 @@ class StreamSession:
             if prep.decision is not None and action != "noop":
                 self.scheduler.observe(action, prep.res.n_out, refresh_s,
                                        compiled=retraced)
+            res = prep.res
             self.metrics.observe_batch(
-                n_in=prep.n_in, n_engine=prep.res.n_out, action=action,
+                n_in=prep.n_in, n_engine=res.n_out, action=action,
                 latency_s=time.perf_counter() - prep.first_arrival,
-                refresh_s=refresh_s, epoch=prep.epoch, retraced=retraced)
+                refresh_s=refresh_s, epoch=prep.epoch, retraced=retraced,
+                n_cancelled=res.n_cancelled, n_inserts=res.n_inserts,
+                n_deletes=res.n_deletes)
         finally:
             self._busy = False
 
@@ -416,6 +419,14 @@ class StreamSession:
         except BaseException:
             self.rollback_batch(prep)
             raise
+        # surface the coalescer's savings on the epoch's RunReport so the
+        # session history (the scheduler's raw material) carries them
+        rep.coalesce = {
+            "n_in": prep.res.n_in, "n_out": prep.res.n_out,
+            "n_records": prep.res.n_records,
+            "n_inserts": prep.res.n_inserts,
+            "n_deletes": prep.res.n_deletes,
+            "n_cancelled": prep.res.n_cancelled}
         retraced = jitcache.generation() != gen0
         self.commit_batch(prep, prep.decision.action, rep.seconds, retraced)
         return prep.decision.action

@@ -1,0 +1,214 @@
+"""The coalescer two ways: the production first-'-'/last-'+' kernel vs the
+same rule re-derived as a dql plan (two min-monoid group_bys joined on the
+record id), edge cases the algebra rework exposed, and the telemetry path
+that surfaces ``CoalesceResult`` counts into ``StreamMetrics``,
+``RunReport.coalesce`` and the serving tier's ``stats()``."""
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+from repro.api import RunConfig, StreamConfig
+from repro.api.report import RunReport
+from repro.apps import wordcount as wc
+from repro.dql.derived import coalesce_plan, coalesce_rows_dql
+from repro.stream import StreamSession
+from repro.stream.coalesce import coalesce_rows
+from repro.stream.metrics import StreamMetrics
+
+BACKENDS = ("xla", "pallas")
+
+
+def _assert_same_result(got, want):
+    assert (got.n_in, got.n_out, got.n_records) == \
+        (want.n_in, want.n_out, want.n_records)
+    assert (got.n_inserts, got.n_deletes, got.n_cancelled) == \
+        (want.n_inserts, want.n_deletes, want.n_cancelled)
+    if want.delta is None:
+        assert got.delta is None
+        return
+    np.testing.assert_array_equal(np.asarray(got.delta.record_ids),
+                                  np.asarray(want.delta.record_ids))
+    np.testing.assert_array_equal(np.asarray(got.delta.sign),
+                                  np.asarray(want.delta.sign))
+    for c in want.delta.values:
+        np.testing.assert_array_equal(np.asarray(got.delta.values[c]),
+                                      np.asarray(want.delta.values[c]))
+
+
+# ---------------------------------------------------------------------------
+# the re-derivation: dql plan == production kernel, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_derived_plan_shape():
+    plan = coalesce_plan(8)
+    spec = plan.spec()
+    # two min/sum group stages + the rid join
+    assert [s.kind for s in spec.stages] == ["group", "group", "join"]
+    assert spec.sources == ("rows",)
+
+
+def test_derived_matches_production_canonical():
+    # the canonical example of test_stream_coalesce.test_first_last_rules
+    rid = np.array([3, 3, 5, 7, 7, 7, 7, 9, 9], np.int32)
+    sg = np.array([-1, 1, 1, -1, 1, -1, 1, 1, -1], np.int8)
+    vals = {"w": np.arange(9 * 2, dtype=np.int32).reshape(9, 2)}
+    _assert_same_result(coalesce_rows_dql(rid, vals, sg),
+                        coalesce_rows(rid, vals, sg))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 24))
+def test_derived_matches_production_random(backend, seed, n):
+    rng = np.random.default_rng(seed)
+    rid = rng.integers(0, 6, n).astype(np.int32)
+    sg = rng.choice(np.array([-1, 1], np.int8), n)
+    vals = {"w": rng.integers(0, 99, (n, 2)).astype(np.int32),
+            "x": rng.integers(0, 99, n).astype(np.float32)}
+    _assert_same_result(
+        coalesce_rows_dql(rid, vals, sg, backend=backend),
+        coalesce_rows(rid, vals, sg, backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# edge cases (satellite of the algebra rework), production + derived
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", (coalesce_rows, coalesce_rows_dql))
+def test_empty_batch_rows(impl):
+    res = impl(np.zeros(0, np.int32), {"w": np.zeros((0, 2), np.int32)},
+               np.zeros(0, np.int8))
+    assert res.delta is None
+    assert (res.n_in, res.n_out, res.n_records) == (0, 0, 0)
+    assert res.n_cancelled == 0
+
+
+@pytest.mark.parametrize("impl", (coalesce_rows, coalesce_rows_dql))
+def test_all_rows_cancel(impl):
+    # every record is created-and-destroyed inside the batch
+    rid = np.repeat(np.arange(4, dtype=np.int32), 2)
+    sg = np.tile(np.array([1, -1], np.int8), 4)
+    res = impl(rid, {"w": np.arange(8, dtype=np.int32)}, sg)
+    assert res.delta is None
+    assert res.n_out == 0 and res.n_cancelled == 8
+    assert res.n_records == 4
+    assert res.n_inserts == 0 and res.n_deletes == 0
+
+
+@pytest.mark.parametrize("impl", (coalesce_rows, coalesce_rows_dql))
+def test_single_record_cap_regrow(impl):
+    # 70 rows on one record crosses the 64-row capacity bucket: the sort
+    # cap must regrow, and only the first '-' / last '+' may survive
+    n = 70
+    rid = np.full(n, 3, np.int32)
+    sg = np.tile(np.array([-1, 1], np.int8), n // 2)
+    vals = {"w": np.arange(n * 2, dtype=np.int32).reshape(n, 2)}
+    res = impl(rid, vals, sg)
+    assert (res.n_in, res.n_out, res.n_records) == (n, 2, 1)
+    assert res.n_cancelled == n - 2
+    np.testing.assert_array_equal(np.asarray(res.delta.sign), [-1, 1])
+    np.testing.assert_array_equal(np.asarray(res.delta.values["w"]),
+                                  vals["w"][[0, n - 1]])
+
+
+@pytest.mark.parametrize("impl", (coalesce_rows, coalesce_rows_dql))
+def test_duplicate_rids_within_one_sign(impl):
+    # rid 5: '+','+','+'  -> last '+' wins (LWW);  rid 6: '-','-' -> first
+    rid = np.array([5, 5, 5, 6, 6], np.int32)
+    sg = np.array([1, 1, 1, -1, -1], np.int8)
+    vals = {"w": np.arange(10, dtype=np.int32).reshape(5, 2)}
+    res = impl(rid, vals, sg)
+    assert (res.n_out, res.n_records) == (2, 2)
+    assert (res.n_inserts, res.n_deletes, res.n_cancelled) == (1, 1, 3)
+    np.testing.assert_array_equal(np.asarray(res.delta.record_ids), [5, 6])
+    np.testing.assert_array_equal(np.asarray(res.delta.sign), [1, -1])
+    np.testing.assert_array_equal(np.asarray(res.delta.values["w"]),
+                                  [[4, 5], [6, 7]])
+
+
+# ---------------------------------------------------------------------------
+# telemetry: CoalesceResult counts reach metrics / reports / tier stats
+# ---------------------------------------------------------------------------
+
+def test_metrics_carry_coalesce_counters():
+    m = StreamMetrics()
+    m.observe_batch(n_in=6, n_engine=2, action="update", latency_s=0.01,
+                    refresh_s=0.005, n_cancelled=4, n_inserts=1,
+                    n_deletes=2)
+    snap = m.snapshot()
+    assert snap["rows_cancelled"] == 4
+    assert snap["net_inserts"] == 1 and snap["net_deletes"] == 2
+
+
+def test_report_coalesce_summary():
+    rep = RunReport(name="x", mode="accumulator", epoch=1, backend="xla",
+                    coalesce={"n_in": 6, "n_out": 2, "n_records": 1,
+                              "n_inserts": 0, "n_deletes": 0,
+                              "n_cancelled": 4})
+    assert "coalesced=-4rows" in rep.summary()
+    rep.coalesce = None
+    assert "coalesced" not in rep.summary()
+
+
+def test_stream_session_surfaces_coalesce():
+    vocab = 16
+    rng = np.random.default_rng(3)
+    docs = rng.integers(0, vocab, (12, 3)).astype(np.int32)
+    spec, data = wc.make_job(docs, vocab)
+    ss = StreamSession(spec, data,
+                       config=RunConfig(backend="xla", value_bytes=4),
+                       stream=StreamConfig(max_batch_records=64,
+                                           max_batch_delay=0.01))
+    ss.start(background=False)
+    # one batch: doc 2 rewritten three times -> 4 interior rows cancel
+    cur = docs[2].copy()
+    rids, bufs, sgs = [], [], []
+    for _ in range(3):
+        new = rng.integers(0, vocab, cur.shape).astype(np.int32)
+        rids += [2, 2]
+        bufs += [cur, new]
+        sgs += [-1, 1]
+        cur = new
+    ss.submit(np.asarray(rids, np.int32), {"w": np.stack(bufs)},
+              np.asarray(sgs, np.int8))
+    ss.drain(timeout=60)
+
+    rep = ss.session.history[-1]
+    assert rep.coalesce == {"n_in": 6, "n_out": 2, "n_records": 1,
+                            "n_inserts": 0, "n_deletes": 0, "n_cancelled": 4}
+    assert "coalesced=-4rows" in rep.summary()
+    snap = ss.metrics.snapshot()
+    assert snap["rows_cancelled"] == 4
+    assert snap["net_inserts"] == 0 and snap["net_deletes"] == 0
+    docs[2] = cur
+    np.testing.assert_array_equal(
+        np.asarray(ss.session.result["c"]).ravel(), wc.oracle(docs, vocab))
+    ss.stop()
+
+
+def test_serve_tier_aggregates_coalesce():
+    from repro.serve import ServeTier, loadgen
+    tier = ServeTier(batch_refresh=False)
+    mirrors = loadgen.make_fleet(tier, 2, backend="xla", seed=5, vocab=16,
+                                 n_docs=6)
+    rng = np.random.default_rng(7)
+    for name, docs in mirrors.items():
+        cur = docs[0].copy()
+        rids, bufs, sgs = [], [], []
+        for _ in range(2):                  # one interior pair cancels
+            new = rng.integers(0, 16, cur.shape).astype(np.int32)
+            rids += [0, 0]
+            bufs += [cur, new]
+            sgs += [-1, 1]
+            cur = new
+        docs[0] = cur
+        tier.submit(name, np.asarray(rids, np.int32),
+                    {"w": np.stack(bufs)}, np.asarray(sgs, np.int8))
+    tier.drain(timeout=120)
+    stats = tier.stats()
+    assert stats["rows_cancelled"] == 2 * len(mirrors)
+    assert stats["net_inserts"] == 0 and stats["net_deletes"] == 0
+    per_tenant = sum(h.ss.metrics.snapshot()["rows_cancelled"]
+                     for h in tier.handles.values())
+    assert per_tenant == stats["rows_cancelled"]
+    tier.stop()

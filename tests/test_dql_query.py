@@ -1,0 +1,444 @@
+"""repro.dql end-to-end: wordcount-as-query bitwise parity with
+``apps/wordcount.py``, oracle checks for the query workload family,
+the ``update(delta) == full re-run`` property over random plans,
+checkpoint/restore, the streaming adapter, and the zero-steady-retrace
+witness (PR-6 bucketed ladder through the query driver)."""
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+from repro import dql
+from repro.api import RunConfig, Session
+from repro.apps import wordcount as wc
+from repro.core.engine import JobSpec
+from repro.core.incremental import apply_delta_host, make_delta
+from repro.core.kvstore import make_kv
+from repro.dql import workloads as wl
+from repro.kernels import jitcache, ops
+
+BACKENDS = ("xla", "pallas")
+VOCAB = 16
+
+
+def _cfg(backend, **kw):
+    return RunConfig(backend=backend, value_bytes=4, **kw)
+
+
+def _doc_delta(rng, docs, k):
+    """'-old'/'+new' rewrite of ``k`` random documents, mutating ``docs``."""
+    rows = rng.choice(len(docs), size=k, replace=False).astype(np.int32)
+    new = rng.integers(0, VOCAB, (k, docs.shape[1])).astype(np.int32)
+    dk = np.repeat(rows, 2)
+    sg = np.tile(np.array([-1, 1], np.int8), k)
+    buf = np.empty((2 * k, docs.shape[1]), np.int32)
+    buf[0::2] = docs[rows]
+    buf[1::2] = new
+    docs[rows] = new
+    return make_delta(dk, {"w": buf}, sg)
+
+
+# ---------------------------------------------------------------------------
+# wordcount as a query: bit-for-bit parity with apps/wordcount.py
+# ---------------------------------------------------------------------------
+
+def test_wordcount_lowers_to_jobspec():
+    plan = wl.wordcount_query(VOCAB)
+    spec = plan.spec()
+    assert isinstance(spec, JobSpec)
+    assert spec.num_keys == VOCAB and spec.name == "wordcount"
+    q = plan.compile(_cfg("xla"))
+    assert q.sources == ("docs",)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_wordcount_bitwise_parity(backend):
+    rng = np.random.default_rng(7)
+    n, words, epochs = (24, 4, 3) if backend == "xla" else (12, 3, 2)
+    docs = rng.integers(0, VOCAB, (n, words)).astype(np.int32)
+
+    spec, data = wc.make_job(docs, VOCAB)
+    app = Session(spec, _cfg(backend))
+    rep_app = app.run(data)
+
+    q = wl.wordcount_query(VOCAB).compile(_cfg(backend))
+    rep_q = q.run(data)
+
+    # same engine path (accumulator/MRBG pick), same kernels, same bits
+    assert rep_q.mode == rep_app.mode
+    np.testing.assert_array_equal(q.result["c"], app.result["c"])
+
+    mirror = docs.copy()
+    for _ in range(epochs):
+        d = _doc_delta(rng, mirror, 3)
+        app.update(d)
+        q.update(d)
+        np.testing.assert_array_equal(q.result["c"], app.result["c"])
+    np.testing.assert_array_equal(
+        q.result["c"].ravel(), wc.oracle(mirror, VOCAB))
+
+
+# ---------------------------------------------------------------------------
+# the workload family vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_join_matches_oracle_and_fresh_run(backend):
+    users = 32 if backend == "xla" else 16
+    datas = wl.join_data(users, seed=3)
+    q = wl.join_query(users).compile(_cfg(backend))
+    q.run(datas)
+
+    vals, valid = q.relation()
+    ovals, ovalid = wl.join_oracle(datas)
+    np.testing.assert_array_equal(valid, ovalid)
+    for c in ("amt", "n"):
+        np.testing.assert_array_equal(np.where(valid, vals[c], 0), ovals[c])
+
+    # incremental refresh == compiling fresh on the mutated inputs
+    d = wl.join_delta(datas, 0.125, seed=5)
+    rep = q.update(d)
+    assert rep.mode == "query-incremental" and rep.affected_keys >= 0
+
+    mutated = {}
+    for name, kv in datas.items():
+        k = np.array(kv.keys)
+        v = {c: np.array(a) for c, a in kv.values.items()}
+        ok = np.array(kv.valid)
+        apply_delta_host(k, v, ok, d[name])
+        mutated[name] = make_kv(k, v, ok)
+    twin = wl.join_query(users).compile(_cfg(backend))
+    twin.run(mutated)
+    tvals, tvalid = twin.relation()
+    vals, valid = q.relation()
+    np.testing.assert_array_equal(valid, tvalid)
+    for c in ("amt", "n"):
+        np.testing.assert_array_equal(np.where(valid, vals[c], 0),
+                                      np.where(tvalid, tvals[c], 0))
+
+    # rerun() (the Fig. 8 alternative) agrees too
+    q.rerun()
+    rvals, rvalid = q.relation()
+    np.testing.assert_array_equal(rvalid, tvalid)
+    for c in ("amt", "n"):
+        np.testing.assert_array_equal(np.where(rvalid, rvals[c], 0),
+                                      np.where(tvalid, tvals[c], 0))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_windowed_matches_oracle(backend):
+    keys, size, slide, wins = (8, 8, 4, 8) if backend == "xla" \
+        else (4, 8, 4, 4)
+    n = 64 if backend == "xla" else 24
+    t_max = wins * slide
+    kv = wl.events_data(n, keys, t_max=t_max, seed=2)
+    q = wl.windowed_query(keys, size=size, slide=slide,
+                          num_windows=wins).compile(_cfg(backend))
+    assert isinstance(q.qspec, JobSpec)      # window is key-space expansion
+    q.run(kv)
+    oracle = wl.windowed_oracle(kv, keys, size=size, slide=slide,
+                                num_windows=wins)
+    np.testing.assert_allclose(q.result["v"].ravel(), oracle, atol=1e-4)
+
+    d = wl.events_delta(kv, 0.1, t_max=t_max, seed=4)
+    q.update(d)
+    k = np.array(kv.keys)
+    v = {c: np.array(a) for c, a in kv.values.items()}
+    ok = np.array(kv.valid)
+    apply_delta_host(k, v, ok, d)
+    oracle = wl.windowed_oracle(make_kv(k, v, ok), keys, size=size,
+                                slide=slide, num_windows=wins)
+    np.testing.assert_allclose(q.result["v"].ravel(), oracle, atol=1e-4)
+
+
+def test_cooccurrence_counts():
+    rng = np.random.default_rng(11)
+    vocab, n, words = 8, 20, 5
+    docs = rng.integers(0, vocab, (n, words)).astype(np.int32)
+    docs[rng.random((n, words)) < 0.1] = -1        # padded slots
+    kv = make_kv(np.arange(n, dtype=np.int32), {"w": docs})
+
+    q = wl.cooccurrence_query(vocab).compile(_cfg("xla"))
+    q.run(kv)
+    np.testing.assert_array_equal(q.result["n"].ravel(),
+                                  wl.cooccurrence_oracle(kv, vocab))
+
+    mirror = docs.copy()
+    rows = np.array([0, 3, 7], np.int32)
+    new = rng.integers(0, vocab, (3, words)).astype(np.int32)
+    dk = np.repeat(rows, 2)
+    sg = np.tile(np.array([-1, 1], np.int8), 3)
+    buf = np.empty((6, words), np.int32)
+    buf[0::2] = mirror[rows]
+    buf[1::2] = new
+    mirror[rows] = new
+    q.update(make_delta(dk, {"w": buf}, sg))
+    np.testing.assert_array_equal(
+        q.result["n"].ravel(),
+        wl.cooccurrence_oracle(
+            make_kv(np.arange(n, dtype=np.int32), {"w": mirror}), vocab))
+
+
+# ---------------------------------------------------------------------------
+# multi-stage change propagation: group_by -> filter -> group_by
+# ---------------------------------------------------------------------------
+
+def _chained_plan(k1, k2):
+    return (dql.scan("x")
+            .group_by("k", num_keys=k1, value="v", agg="sum", name="per_key")
+            .filter(lambda v: v["v"] > 5)
+            .map(lambda v: {"b": (v["v"] / 8).astype("int32").clip(0, k2 - 1),
+                            "v": v["v"]})
+            .group_by("b", num_keys=k2, value="v", agg="sum", name="bucket"))
+
+
+def _chained_oracle(k, v, valid, k1, k2):
+    s1 = np.zeros(k1)
+    for ki, vi, ok in zip(k, v, valid):
+        if ok:
+            s1[ki] += vi
+    out = np.zeros(k2)
+    for ki in range(k1):
+        if s1[ki] > 5:
+            out[min(int(s1[ki] // 8), k2 - 1)] += s1[ki]
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_chained_group_by(backend):
+    rng = np.random.default_rng(5)
+    n, k1, k2 = (48, 16, 4) if backend == "xla" else (24, 8, 4)
+    k = rng.integers(0, k1, n).astype(np.int32)
+    v = rng.integers(0, 10, n).astype(np.float32)
+    valid = np.ones(n, bool)
+    q = _chained_plan(k1, k2).compile(_cfg(backend))
+    q.run(make_kv(np.arange(n, dtype=np.int32), {"k": k, "v": v}, valid))
+    np.testing.assert_allclose(q.result["v"].ravel(),
+                               _chained_oracle(k, v, valid, k1, k2))
+
+    rows = rng.choice(n, size=4, replace=False).astype(np.int32)
+    newv = rng.integers(0, 10, 4).astype(np.float32)
+    newk = rng.integers(0, k1, 4).astype(np.int32)
+    dk = np.repeat(rows, 2)
+    sg = np.tile(np.array([-1, 1], np.int8), 4)
+    kb = np.empty(8, np.int32)
+    kb[0::2], kb[1::2] = k[rows], newk
+    vb = np.empty(8, np.float32)
+    vb[0::2], vb[1::2] = v[rows], newv
+    k[rows], v[rows] = newk, newv
+    rep = q.update(make_delta(dk, {"k": kb, "v": vb}, sg))
+    assert rep.mode == "query-incremental"
+    np.testing.assert_allclose(q.result["v"].ravel(),
+                               _chained_oracle(k, v, valid, k1, k2))
+
+
+# ---------------------------------------------------------------------------
+# property: update(delta) == compiling fresh on the mutated input,
+# over random map/filter/group_by/join plans (integer payloads: exact)
+# ---------------------------------------------------------------------------
+
+_OPS = (
+    lambda q: q.map(lambda v: {**v, "v": v["v"] * 2}),
+    lambda q: q.map(lambda v: {**v, "v": v["v"] + 1}),
+    lambda q: q.filter(lambda v: (v["r"] % 3) > 0),
+)
+
+
+def _rand_plan(seed, n_ops, with_join, agg, num_keys):
+    q = dql.scan("x")
+    for i in range(n_ops):
+        q = _OPS[(seed + i) % len(_OPS)](q)
+    g = q.group_by("k", num_keys=num_keys, value="v", agg=agg, name="a")
+    if not with_join:
+        return g
+    h = q.group_by("k", num_keys=num_keys, value={"u": "v"}, agg="sum",
+                   name="b")
+    return g.join(h, name="j")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 3), st.booleans(),
+       st.sampled_from(("sum", "min", "max")))
+def test_update_equals_full_run(seed, n_ops, with_join, agg):
+    rng = np.random.default_rng(seed)
+    n, num_keys = 24, 8
+    k = rng.integers(0, num_keys, n).astype(np.int32)
+    v = rng.integers(0, 10, n).astype(np.float32)
+    r = rng.integers(0, 6, n).astype(np.int32)
+    valid = np.ones(n, bool)
+
+    plan = _rand_plan(seed, n_ops, with_join, agg, num_keys)
+    q = plan.compile(_cfg("xla"))
+    q.run(make_kv(np.arange(n, dtype=np.int32),
+                  {"k": k.copy(), "v": v.copy(), "r": r.copy()},
+                  valid.copy()))
+
+    m = int(rng.integers(1, 6))
+    rows = rng.choice(n, size=m, replace=False).astype(np.int32)
+    cols = {}
+    for name, arr, new in (
+            ("k", k, rng.integers(0, num_keys, m).astype(np.int32)),
+            ("v", v, rng.integers(0, 10, m).astype(np.float32)),
+            ("r", r, rng.integers(0, 6, m).astype(np.int32))):
+        buf = np.empty(2 * m, arr.dtype)
+        buf[0::2], buf[1::2] = arr[rows], new
+        cols[name] = buf
+        arr[rows] = new
+    d = make_delta(np.repeat(rows, 2), cols,
+                   np.tile(np.array([-1, 1], np.int8), m))
+    q.update(d)
+
+    twin = plan.compile(_cfg("xla"))
+    twin.run(make_kv(np.arange(n, dtype=np.int32),
+                     {"k": k, "v": v, "r": r}, valid))
+
+    vals, ok = q.relation()
+    tvals, tok = twin.relation()
+    np.testing.assert_array_equal(ok, tok)
+    assert set(vals) == set(tvals)
+    for c in vals:
+        np.testing.assert_array_equal(np.where(ok, vals[c], 0),
+                                      np.where(tok, tvals[c], 0))
+
+
+# ---------------------------------------------------------------------------
+# zero steady retraces: bucketed deltas through the query driver
+# ---------------------------------------------------------------------------
+
+def test_zero_steady_retraces():
+    users = 64
+    datas = wl.join_data(users, seed=9)
+    q = wl.join_query(users).compile(_cfg("xla"))
+    q.run(datas)
+    q.update(wl.join_delta(datas, 0.05, seed=100))   # prewarm the ladder
+    gen0 = jitcache.generation()
+    for s in range(4):
+        q.update(wl.join_delta(datas, 0.05, seed=101 + s))
+    assert jitcache.generation() == gen0
+
+
+# ---------------------------------------------------------------------------
+# storeless evaluate() + the kernels lowering shim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_evaluate_matches_compiled(backend):
+    users = 16
+    datas = wl.join_data(users, seed=1)
+    vals, valid = dql.evaluate(wl.join_query(users), datas, backend=backend)
+    ovals, ovalid = wl.join_oracle(datas)
+    np.testing.assert_array_equal(np.asarray(valid), ovalid)
+    for c in ("amt", "n"):
+        np.testing.assert_array_equal(
+            np.where(ovalid, np.asarray(vals[c]), 0), ovals[c])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_group_reduce_masks_out_of_range(backend):
+    from repro.core.kvstore import sum_reducer
+    keys = np.array([0, 1, -1, 5, 2, 1], np.int32)
+    vals = {"v": np.array([1., 2., 3., 4., 5., 6.], np.float32)}
+    valid = np.array([1, 1, 1, 1, 0, 1], bool)
+    acc, counts = ops.group_reduce(sum_reducer(), keys, vals, valid, 4,
+                                   backend=backend)
+    # -1 masked, 5 out of range, index 4 invalid
+    np.testing.assert_allclose(np.asarray(acc["v"]), [1., 8., 0., 0.])
+    np.testing.assert_array_equal(np.asarray(counts), [1, 2, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restore + streaming adapter
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_query_kind(tmp_path):
+    users = 32
+    datas = wl.join_data(users, seed=6)
+    plan = wl.join_query(users)
+    q = plan.compile(_cfg("xla"))
+    q.run(datas)
+    q.update(wl.join_delta(datas, 0.1, seed=20))
+    root = tmp_path / "ck"
+    ep = q.checkpoint(str(root))
+    assert ep.name == "ep_000001"            # committed epoch dir
+
+    r = dql.Query.restore(plan, str(root), _cfg("xla"))
+    vals, valid = q.relation()
+    rvals, rvalid = r.relation()
+    np.testing.assert_array_equal(valid, rvalid)
+    for c in vals:
+        np.testing.assert_array_equal(np.where(valid, vals[c], 0),
+                                      np.where(rvalid, rvals[c], 0))
+
+    d2 = wl.join_delta(datas, 0.1, seed=21)
+    q.update(d2)
+    r.update(d2)
+    vals, valid = q.relation()
+    rvals, rvalid = r.relation()
+    np.testing.assert_array_equal(valid, rvalid)
+    for c in vals:
+        np.testing.assert_array_equal(np.where(valid, vals[c], 0),
+                                      np.where(rvalid, rvals[c], 0))
+
+    with pytest.raises(RuntimeError):
+        r.rerun()            # restored queries have no input mirrors
+
+
+def test_stream_adapter_over_query(tmp_path):
+    from repro.stream import DeltaRecord, QueueSource
+    rng = np.random.default_rng(13)
+    docs = rng.integers(0, VOCAB, (24, 4)).astype(np.int32)
+    mirror = docs.copy()
+    src = QueueSource(capacity=4)
+    for e in range(3):
+        d = _doc_delta(rng, mirror, 3)
+        src.push(DeltaRecord(record_ids=np.asarray(d.record_ids),
+                             values={"w": np.asarray(d.values["w"])},
+                             sign=np.asarray(d.sign), epoch=e))
+    src.seal()
+
+    q = wl.wordcount_query(VOCAB).compile(_cfg("xla"))
+    kv = wc.make_input(np.arange(len(docs)), docs)
+    ss = q.stream(kv, source=src)
+    ss.start(background=False)
+    ss.drain(timeout=60)
+    np.testing.assert_array_equal(
+        np.asarray(ss.session.result["c"]).ravel(),
+        wc.oracle(mirror, VOCAB))
+    ss.stop()
+
+
+# ---------------------------------------------------------------------------
+# planner error surface
+# ---------------------------------------------------------------------------
+
+def test_lowering_rejects_stateless_only_plan():
+    with pytest.raises(ValueError, match="at least one group_by or join"):
+        dql.scan("x").map(lambda v: v).compile(_cfg("xla"))
+
+
+def test_lowering_rejects_trailing_window():
+    plan = (dql.scan("x")
+            .group_by("k", num_keys=4, value="v", name="g")
+            .window(4, num_windows=2))
+    with pytest.raises(ValueError, match="trailing window"):
+        plan.compile(_cfg("xla"))
+
+
+def test_join_requires_key_space():
+    with pytest.raises(ValueError, match="num_keys"):
+        dql.scan("a").join(dql.scan("b"))
+
+
+def test_group_by_validates_agg():
+    with pytest.raises(ValueError, match="agg"):
+        dql.scan("x").group_by("k", num_keys=4, value="v", agg="median")
+
+
+def test_join_column_collision_raises():
+    users = 8
+    uid = np.arange(users, dtype=np.int32)
+    kv = {name: make_kv(uid, {"v": np.ones(users, np.float32)})
+          for name in ("a", "b")}
+    plan = dql.scan("a").join(dql.scan("b"), num_keys=users, name="bad")
+    q = plan.compile(_cfg("xla"))
+    with pytest.raises(ValueError, match="collide"):
+        q.run(kv)
